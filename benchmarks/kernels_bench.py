@@ -1,0 +1,49 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — correctness-level
+timings; HBM-traffic derivation is the TPU-relevant 'derived' column).
+
+The fused EF+QSGD kernel's value is the traffic model:
+    unfused: 5 reads + 3 writes of 4N bytes  (a=e+g; Q; e'=a-deq)
+    fused:   3 reads + 1.25 writes
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.kernels import ops
+
+N = 262_144  # modest for interpret-mode timing
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (N,)) * 0.1
+    e = jax.random.normal(jax.random.fold_in(key, 1), (N,)) * 0.05
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (N,))
+
+    us = time_fn(lambda: ops.qsgd_quantize(x, u, levels=16))
+    rows.append(Row("kernels/qsgd", us, f"{4*N/1e6:.1f}MB_read_1.0MB_write"))
+    us = time_fn(lambda: ops.qsgd_ef_fused(x, e, u, levels=16))
+    unfused_traffic = 8 * 4 * N
+    fused_traffic = (3 * 4 + 1 + 4) * N
+    rows.append(Row("kernels/qsgd_ef_fused", us,
+                    f"hbm_traffic_{unfused_traffic/fused_traffic:.2f}x_less"))
+    us = time_fn(lambda: ops.terngrad_quantize(x, u))
+    rows.append(Row("kernels/terngrad", us, "int8_payload"))
+    us = time_fn(lambda: ops.sign_pack(x))
+    rows.append(Row("kernels/sign_pack", us, "32x_wire"))
+    us = time_fn(lambda: ops.threshold_sparsify(x, 0.05))
+    rows.append(Row("kernels/threshold", us, "fused_mask+count"))
+
+    B, S, H, hd = 1, 256, 4, 64
+    r, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, hd)) * 0.3 for i in range(3, 6))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 6), (B, S, H, hd))) * 0.5 + 0.4
+    uu = jax.random.normal(jax.random.fold_in(key, 7), (H, hd)) * 0.1
+    s0 = jnp.zeros((B, H, hd, hd))
+    us = time_fn(lambda: ops.wkv6(r, k, v, w, uu, s0, chunk=64), reps=3)
+    flops = 4 * B * S * H * hd * hd * 2
+    rows.append(Row("kernels/wkv6_chunked", us, f"{flops/1e6:.0f}MFLOP_vmem_resident_state"))
+    return rows

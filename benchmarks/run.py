@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Each module also *asserts* the
+table's qualitative claims (rows named ``*/claims_validated``).
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableIII,fig6]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = (
+    ("tableIII_allreduce", "benchmarks.allreduce_table"),
+    ("tableIV_comm_cost", "benchmarks.comm_cost_table"),
+    ("tableII_fig4_sync", "benchmarks.sync_timeline"),
+    ("fig6_compression", "benchmarks.compression_fidelity"),
+    ("tableIV_convergence", "benchmarks.convergence"),
+    ("sec7_schedule", "benchmarks.schedule_table"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("train_micro", "benchmarks.train_micro"),
+)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="", help="comma-separated module tags")
+    args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(modname)
+            for row in mod.run():
+                print(row.csv())
+            print(f"# {tag} done in {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            failures.append((tag, repr(e)))
+    if failures:
+        print("# FAILURES:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

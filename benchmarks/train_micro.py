@@ -1,0 +1,64 @@
+"""End-to-end micro-training benchmark: per-step wall time of a reduced
+model under each taxonomy cell (the system-level counterpart of Table IV) +
+captured per-step collective wire bytes from the comms accounting."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import comms
+from repro.core.types import CommConfig
+from repro.data.pipeline import SyntheticBatches
+from repro.launch.mesh import make_test_mesh
+from repro.optim.optimizers import momentum_sgd
+from repro.train.steps import build_bundle
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    cfg = get_config("qwen3-0.6b").reduced().with_updates(
+        vocab=256, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, n_layers=2
+    )
+    shape = InputShape("bench", 64, 8, "train")
+    mesh = make_test_mesh(1, 1)
+    data = SyntheticBatches(cfg, shape).batch(0)
+    batch = {k: jnp.asarray(v) for k, v in data.items()}
+    from repro.models.transformer import init_params
+
+    params = init_params(cfg, jax.random.key(0), 1)
+
+    cells = [
+        ("dense_bsp", CommConfig()),
+        ("qsgd16", CommConfig(compressor="qsgd", compressor_kwargs={"levels": 16})),
+        ("topk1pct_ef", CommConfig(compressor="topk", compressor_kwargs={"ratio": 0.01},
+                                   error_feedback=True)),
+        ("signsgd_mv", CommConfig(compressor="signsgd")),
+        ("topk_bucketed", CommConfig(compressor="topk", compressor_kwargs={"ratio": 0.01},
+                                     error_feedback=True, bucket_mb=4)),
+        ("gossip_dpsgd", CommConfig(aggregator="gossip")),
+        ("powersgd_r4_ef", CommConfig(compressor="powersgd", compressor_kwargs={"rank": 4},
+                                      error_feedback=True, bucket_mb=4)),
+    ]
+    for tag, comm in cells:
+        with comms.capture() as log:
+            bundle = build_bundle(cfg, mesh, comm, momentum_sgd(), shape)
+            state = bundle.init_state(params)
+            step = bundle.gossip_step if comm.aggregator == "gossip" else bundle.train_step
+            lr = jnp.asarray(0.05)
+            state, m = step(state, batch, lr)  # traced within capture
+        jax.block_until_ready(m["loss"])
+        import time as _time
+
+        reps = 4
+        t0 = _time.perf_counter()
+        for _ in range(reps):  # state is donated — chain it
+            state, m = step(state, batch, lr)
+        jax.block_until_ready(m["loss"])
+        us = (_time.perf_counter() - t0) / reps * 1e6
+        wire = log.by_tag().get("grad_agg", 0.0) + log.by_tag().get("gossip_mix", 0.0)
+        rows.append(Row(f"train_micro/{tag}", us, f"agg_wire={wire/1e3:.1f}KB_per_step"))
+    return rows

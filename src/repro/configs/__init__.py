@@ -1,0 +1,31 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, active_params, n_params
+
+ARCHS = (
+    "qwen2-vl-2b",
+    "seamless-m4t-large-v2",
+    "rwkv6-3b",
+    "hymba-1.5b",
+    "qwen3-moe-30b-a3b",
+    "qwen1.5-32b",
+    "qwen3-0.6b",
+    "deepseek-v2-lite-16b",
+    "gemma3-12b",
+    "glm4-9b",
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.get_config()
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS

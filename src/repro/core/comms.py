@@ -1,0 +1,212 @@
+"""Instrumented collectives.
+
+Every collective the framework issues goes through these wrappers.  At trace
+time (inside ``capture()``) each call records its *local payload bytes*, the
+mesh axes involved, and the enclosing loop multiplicity (``loop(n)`` wraps
+``lax.scan`` bodies).  This gives an exact, design-coupled account of the
+bytes each collective moves — the quantity the paper's communication-cost
+tables (III, IV) are about — without fragile HLO while-loop parsing.
+(The optimized-HLO text is still parsed as a cross-check; see
+``repro.launch.roofline``.)
+
+Backward passes: JAX AD inserts the transposed collectives (psum↔pbroadcast,
+all_gather↔reduce_scatter) which do not pass through these wrappers; train
+steps therefore scale forward collective bytes by ``backward_factor`` (≈2 for
+Megatron-style TP, exact for the gradient aggregation itself which happens
+outside AD).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STATE = threading.local()
+
+
+@dataclass
+class CollRecord:
+    kind: str  # psum | pmax | all_gather | ppermute | all_to_all | reduce_scatter
+    axes: tuple[str, ...]
+    payload_bytes: int  # local operand bytes per call
+    mult: float  # loop multiplicity
+    n_workers: int = 1  # product of the collective's axis sizes
+    tag: str = ""
+
+    @property
+    def wire_bytes(self) -> float:
+        """Per-device ICI bytes implied by the (bandwidth-optimal) algorithm:
+        all-reduce 2p(n-1)/n; all-gather p(n-1) [p = local shard];
+        reduce-scatter / all-to-all p(n-1)/n; ppermute p."""
+        p, n = self.payload_bytes, max(self.n_workers, 1)
+        if n == 1:
+            return 0.0
+        if self.kind in ("psum", "pmax"):
+            return 2.0 * p * (n - 1) / n
+        if self.kind == "all_gather":
+            return float(p * (n - 1))
+        if self.kind in ("reduce_scatter", "all_to_all"):
+            return p * (n - 1) / n
+        return float(p)  # ppermute
+
+
+@dataclass
+class CommLog:
+    records: list[CollRecord] = field(default_factory=list)
+
+    def total_bytes(self, kinds: tuple[str, ...] | None = None) -> float:
+        """Total per-device wire bytes."""
+        return sum(
+            r.wire_bytes * r.mult
+            for r in self.records
+            if kinds is None or r.kind in kinds
+        )
+
+    def payload_bytes(self) -> float:
+        return sum(r.payload_bytes * r.mult for r in self.records)
+
+    def by_kind(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.kind] = out.get(r.kind, 0.0) + r.wire_bytes * r.mult
+        return out
+
+    def by_tag(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            key = r.tag or "untagged"
+            out[key] = out.get(key, 0.0) + r.wire_bytes * r.mult
+        return out
+
+
+def _log() -> CommLog | None:
+    return getattr(_STATE, "log", None)
+
+
+def _mult() -> float:
+    return getattr(_STATE, "mult", 1.0)
+
+
+def _tag() -> str:
+    return getattr(_STATE, "tag", "")
+
+
+@contextlib.contextmanager
+def capture():
+    """Collect collective records issued while tracing under this context."""
+    prev = _log()
+    _STATE.log = CommLog()
+    try:
+        yield _STATE.log
+    finally:
+        _STATE.log = prev
+
+
+@contextlib.contextmanager
+def loop(n: int):
+    """Multiply records inside (e.g. around a ``lax.scan`` over layers)."""
+    prev = _mult()
+    _STATE.mult = prev * n
+    try:
+        yield
+    finally:
+        _STATE.mult = prev
+
+
+@contextlib.contextmanager
+def tag(name: str):
+    prev = _tag()
+    _STATE.tag = name
+    try:
+        yield
+    finally:
+        _STATE.tag = prev
+
+
+def _bytes(x) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+
+
+def _record(kind: str, axes, x) -> None:
+    log = _log()
+    if log is None:
+        return
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = sum(_bytes(leaf) for leaf in jax.tree.leaves(x))
+    n = 1
+    try:
+        for a in axes:
+            n *= jax.lax.axis_size(a)
+    except Exception:  # outside shard_map (e.g. unit tests): size unknown
+        n = 1
+    log.records.append(CollRecord(kind, tuple(axes), total, _mult(), n, _tag()))
+
+
+# ---------------------------------------------------------------------------
+# Wrappers.
+# ---------------------------------------------------------------------------
+
+
+def psum(x, axes, *, tag_: str = ""):
+    if isinstance(axes, (list, tuple)) and not axes:
+        return x
+    _record("psum", axes, x)
+    return jax.lax.psum(x, axes)
+
+
+def pmax(x, axes):
+    if isinstance(axes, (list, tuple)) and not axes:
+        return x
+    _record("pmax", axes, x)
+    return jax.lax.pmax(x, axes)
+
+
+def pmean(x, axes):
+    if isinstance(axes, (list, tuple)) and not axes:
+        return x
+    _record("psum", axes, x)
+    return jax.lax.pmean(x, axes)
+
+
+def all_gather(x, axes, *, axis: int = 0, tiled: bool = False):
+    _record("all_gather", axes, x)
+    return jax.lax.all_gather(x, axes, axis=axis, tiled=tiled)
+
+
+def ppermute(x, axis_name, perm):
+    _record("ppermute", axis_name, x)
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def all_to_all(x, axis_name, split_axis, concat_axis, *, tiled: bool = True):
+    _record("all_to_all", axis_name, x)
+    return jax.lax.all_to_all(x, axis_name, split_axis, concat_axis, tiled=tiled)
+
+
+def psum_scatter(x, axis_name, *, scatter_dimension: int = 0, tiled: bool = True):
+    _record("reduce_scatter", axis_name, x)
+    return jax.lax.psum_scatter(
+        x, axis_name, scatter_dimension=scatter_dimension, tiled=tiled
+    )
+
+
+def varying(x, axes):
+    """Mark a (constant-created) value as varying over the given mesh axes —
+    needed for scan carries initialized with jnp.zeros inside shard_map."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    return jax.lax.pcast(x, tuple(axes), to="varying")
+
+
+def axis_index(axis_name):
+    return jax.lax.axis_index(axis_name)
+
+
+def axis_size(axis_name) -> int:
+    return jax.lax.axis_size(axis_name)

@@ -1,0 +1,12 @@
+from repro.core.compression.base import (  # noqa: F401
+    Compressed,
+    Compressor,
+    get_compressor,
+    register,
+)
+from repro.core.compression import (  # noqa: F401
+    kernels_backed,
+    powersgd,
+    quantization,
+    sparsification,
+)

@@ -1,0 +1,69 @@
+"""Compressor protocol (paper §V quantization / §VI sparsification).
+
+A compressor maps a flat f32 vector to a wire payload (dict of arrays with
+*static* shapes — an XLA requirement; see DESIGN.md §6 on wire formats) and
+back.  ``wire_bits(n)`` is the analytic per-worker upload size used by the
+communication-cost benchmarks (paper Table IV) and the roofline collective
+term; for payload tensors the simulated collective moves exactly the payload
+arrays, so the two agree except for threshold-style methods whose true
+variable-length encoding XLA cannot express (accounted analytically).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Compressed:
+    """Wire representation of one tensor/bucket."""
+
+    payload: dict[str, jax.Array]
+    n: int  # original element count
+
+    def payload_bytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * jnp.dtype(v.dtype).itemsize for v in self.payload.values())
+
+
+class Compressor(Protocol):
+    name: str
+    unbiased: bool
+    #: how the aggregator may combine payloads without decompressing:
+    #: "none" (gather+decompress), "sum" (psum payload then decompress),
+    #: "majority" (psum signs then sign()).
+    reduce_mode: str
+
+    def compress(self, key: jax.Array, x: jax.Array) -> Compressed: ...
+
+    def decompress(self, c: Compressed) -> jax.Array: ...
+
+    def wire_bits(self, n: int) -> float: ...
+
+
+_REGISTRY: dict[str, Callable[..., Any]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_compressor(name: str, **kwargs) -> Any:
+    if name in (None, "none"):
+        return None
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def list_compressors() -> list[str]:
+    return sorted(_REGISTRY)

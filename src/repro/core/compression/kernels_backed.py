@@ -1,0 +1,75 @@
+"""Compressors backed by the Pallas TPU kernels (repro.kernels).
+
+Same wire semantics as their jnp counterparts (tested equal), but the
+compression pass is a single fused VMEM-tiled kernel, and SignSGD gets true
+1-bit packing (32x wire reduction — int8 payloads are only 4x).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressed, register
+from repro.kernels import ops
+
+f32 = jnp.float32
+
+
+@register("qsgd_kernel")
+@dataclass
+class QSGDKernel:
+    levels: int = 16
+    unbiased: bool = True
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        u = jax.random.uniform(key, x.shape)
+        codes, norm = ops.qsgd_quantize(x, u, levels=self.levels)
+        return Compressed({"code": codes, "norm": norm}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["code"].astype(f32) / self.levels * c.payload["norm"][0]
+
+    def wire_bits(self, n) -> float:
+        import math
+
+        return n * (math.log2(self.levels) + 1) + 32
+
+
+@register("terngrad_kernel")
+@dataclass
+class TernGradKernel:
+    unbiased: bool = True
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        u = jax.random.uniform(key, x.shape)
+        tern, smax = ops.terngrad_quantize(x, u)
+        return Compressed({"tern": tern, "scale": smax}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["tern"].astype(f32) * c.payload["scale"][0]
+
+    def wire_bits(self, n) -> float:
+        return n * 2.0 + 32
+
+
+@register("signsgd_packed")
+@dataclass
+class SignSGDPacked:
+    """SignSGD with true bit packing: 1 bit/element on the wire."""
+
+    unbiased: bool = False
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        return Compressed({"packed": ops.sign_pack(x)}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return ops.sign_unpack(c.payload["packed"], c.n)
+
+    def wire_bits(self, n) -> float:
+        return n * 1.0

@@ -1,0 +1,82 @@
+"""PowerSGD (Vogels et al., 2019) — rank-r power-iteration compression.
+
+The §Perf pair-3 iteration 3 finding (EXPERIMENTS.md) is that gather-based
+quantizers cost MORE wire than dense all-reduce at n=16 because their
+payloads are not reduce-compatible.  PowerSGD is the canonical fix the
+literature converged on: it is a *linear* compressor, so the P/Q factors
+aggregate with plain psum — wire per step is r(a+b) floats regardless of
+worker count.
+
+Aggregation protocol (handled in repro.core.aggregate, reduce_mode
+"powersgd"; Q is carried in the comm state and is identical on every
+worker by construction):
+
+    M   = grad.reshape(a, b)          (+ error feedback, as usual)
+    P   = psum-mean(M @ Q);  P <- orthonormalize(P)
+    Q'  = psum-mean(M^T @ P)
+    M^  = P @ Q'^T ;  e <- M - M^     (per-worker EF)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressed, register
+
+f32 = jnp.float32
+
+
+def shape2d(n: int) -> tuple[int, int]:
+    """Near-square factorization with padding: a x b >= n."""
+    a = max(1, int(math.isqrt(n)))
+    b = -(-n // a)
+    return a, b
+
+
+def orthonormalize(P: jax.Array) -> jax.Array:
+    """Orthonormal column basis via reduced QR (classic Gram-Schmidt loses
+    orthogonality catastrophically on rank-deficient inputs; r is small so
+    QR is cheap)."""
+    Q, _ = jnp.linalg.qr(P.astype(f32))
+    return Q
+
+
+@register("powersgd")
+@dataclass
+class PowerSGD:
+    rank: int = 4
+    unbiased: bool = False
+    reduce_mode: str = "powersgd"
+
+    def init_q(self, n: int, key: jax.Array) -> jax.Array:
+        """Initial Q, IDENTICAL on every worker (fixed key)."""
+        a, b = shape2d(n)
+        return jax.random.normal(key, (b, self.rank), f32)
+
+    def factor_shapes(self, n: int) -> tuple[tuple[int, int], tuple[int, int]]:
+        a, b = shape2d(n)
+        return (a, self.rank), (b, self.rank)
+
+    # local-only roundtrip (fidelity benchmarks; the distributed path lives
+    # in the aggregator)
+    def compress(self, key, x) -> Compressed:
+        n = x.size
+        a, b = shape2d(n)
+        M = jnp.pad(x, (0, a * b - n)).reshape(a, b)
+        Q = self.init_q(n, jax.random.key(7))
+        for _ in range(2):  # a couple of power iterations locally
+            P = orthonormalize(M @ Q)
+            Q = M.T @ P
+        return Compressed({"P": P, "Q": Q}, n)
+
+    def decompress(self, c) -> jax.Array:
+        M = c.payload["P"] @ c.payload["Q"].T
+        return M.reshape(-1)[: c.n]
+
+    def wire_bits(self, n) -> float:
+        a, b = shape2d(n)
+        return (a + b) * self.rank * 32.0

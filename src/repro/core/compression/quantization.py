@@ -1,0 +1,186 @@
+"""Quantization compressors (paper §V).
+
+Implemented: 1-bit SGD [132], TernGrad [136], QSGD [134], SignSGD [137]
+(+majority-vote aggregation [173]), Natural Compression / Natural Dithering
+[170].  All operate on flat f32 vectors; stochastic methods take an rng key
+and are unbiased estimators (property-tested in tests/test_compression.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressed, register
+
+f32 = jnp.float32
+
+
+@register("onebit")
+@dataclass
+class OneBitSGD:
+    """Seide et al. [132]: 1 bit/element + two reconstruction means.
+
+    Biased — must be used with error feedback (as in the original paper)."""
+
+    unbiased: bool = False
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        pos = x >= 0
+        npos = jnp.maximum(jnp.sum(pos), 1)
+        nneg = jnp.maximum(jnp.sum(~pos), 1)
+        mu_pos = jnp.sum(jnp.where(pos, x, 0.0)) / npos
+        mu_neg = jnp.sum(jnp.where(pos, 0.0, x)) / nneg
+        return Compressed(
+            {"bits": pos.astype(jnp.int8), "mu": jnp.stack([mu_neg, mu_pos])}, x.size
+        )
+
+    def decompress(self, c) -> jax.Array:
+        return jnp.where(c.payload["bits"] > 0, c.payload["mu"][1], c.payload["mu"][0])
+
+    def wire_bits(self, n) -> float:
+        return n * 1.0 + 64
+
+
+@register("terngrad")
+@dataclass
+class TernGrad:
+    """Wen et al. [136]: ternary {-1,0,1}·s with s = max|g|; unbiased."""
+
+    unbiased: bool = True
+    reduce_mode: str = "none"
+    clip_sigma: float = 0.0  # optional gradient clipping (paper §V TernGrad)
+
+    def compress(self, key, x) -> Compressed:
+        if self.clip_sigma:
+            sig = jnp.std(x)
+            x = jnp.clip(x, -self.clip_sigma * sig, self.clip_sigma * sig)
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+        p = jnp.abs(x) / s
+        b = (jax.random.uniform(key, x.shape) < p).astype(jnp.int8)
+        tern = (jnp.sign(x).astype(jnp.int8) * b).astype(jnp.int8)
+        return Compressed({"tern": tern, "scale": s[None]}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["tern"].astype(f32) * c.payload["scale"][0]
+
+    def wire_bits(self, n) -> float:
+        return n * 2.0 + 32  # log2(3) rounded up to 2 bits
+
+
+@register("qsgd")
+@dataclass
+class QSGD:
+    """Alistarh et al. [134]: stochastic dithering to s levels of |v|/||v||_2."""
+
+    levels: int = 16  # s
+    unbiased: bool = True
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        s = self.levels
+        norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)
+        y = jnp.abs(x) / norm * s  # in [0, s]
+        l = jnp.floor(y)
+        p = y - l
+        l = l + (jax.random.uniform(key, x.shape) < p)
+        code = (jnp.sign(x) * l).astype(jnp.int8)  # |l| <= s <= 127
+        return Compressed({"code": code, "norm": norm[None]}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["code"].astype(f32) / self.levels * c.payload["norm"][0]
+
+    def wire_bits(self, n) -> float:
+        import math
+
+        return n * (math.log2(self.levels) + 1) + 32
+
+
+@register("signsgd")
+@dataclass
+class SignSGD:
+    """Bernstein et al. [137]; aggregate with majority vote [173] via psum of
+    ±1 int8 payloads (reduce_mode="majority")."""
+
+    unbiased: bool = False
+    reduce_mode: str = "majority"
+
+    def compress(self, key, x) -> Compressed:
+        return Compressed({"sign": jnp.where(x >= 0, 1, -1).astype(jnp.int8)}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["sign"].astype(f32)
+
+    def wire_bits(self, n) -> float:
+        return n * 1.0
+
+
+@register("natural")
+@dataclass
+class NaturalCompression:
+    """Horváth et al. [170]: stochastic rounding to powers of two — drops the
+    mantissa entirely; payload is sign + int8 exponent. Unbiased."""
+
+    unbiased: bool = True
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        ax = jnp.abs(x)
+        safe = jnp.maximum(ax, 1e-38)
+        e = jnp.floor(jnp.log2(safe))
+        lo = jnp.exp2(e)
+        p_up = (ax - lo) / lo  # P(round up to 2^(e+1)) = (|t|-2^e)/2^e
+        up = jax.random.uniform(key, x.shape) < p_up
+        e = jnp.where(up, e + 1, e)
+        e = jnp.where(ax < 1e-37, -127.0, e)
+        code = jnp.clip(e, -127, 127).astype(jnp.int8)
+        sign = jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+        return Compressed({"exp": code, "sign": sign}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        e = c.payload["exp"].astype(f32)
+        mag = jnp.where(e <= -127, 0.0, jnp.exp2(e))
+        return c.payload["sign"].astype(f32) * mag
+
+    def wire_bits(self, n) -> float:
+        return n * 9.0
+
+
+@register("natural_dithering")
+@dataclass
+class NaturalDithering:
+    """[170] §5: QSGD with geometric (power-of-two) level partition."""
+
+    levels: int = 8  # number of geometric levels
+    unbiased: bool = True
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)
+        y = jnp.abs(x) / norm  # in [0,1]
+        ymin = 2.0 ** -(self.levels - 1)
+        e = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(y, ymin))), -(self.levels - 1), 0)
+        hi = jnp.exp2(e)
+        lo = hi / 2
+        small = y < ymin
+        # unbiased two-point rounding: [lo, hi] above ymin, [0, ymin] below
+        p_hi = jnp.where(small, y / ymin, (y - lo) / jnp.maximum(hi - lo, 1e-30))
+        take_hi = jax.random.uniform(key, x.shape) < p_hi
+        ZERO = -self.levels  # sentinel: decodes to 0
+        code = jnp.where(take_hi, e, jnp.where(small, ZERO, e - 1))
+        code = jnp.clip(code, ZERO, 0).astype(jnp.int8)
+        sign = jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+        return Compressed({"exp": code, "sign": sign, "norm": norm[None]}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        mag = jnp.exp2(c.payload["exp"].astype(f32))
+        mag = jnp.where(c.payload["exp"] <= -self.levels, 0.0, mag)
+        return c.payload["sign"].astype(f32) * mag * c.payload["norm"][0]
+
+    def wire_bits(self, n) -> float:
+        import math
+
+        return n * (math.log2(self.levels) + 1) + 32

@@ -1,0 +1,308 @@
+"""Sparsification compressors (paper §VI).
+
+Implemented: Top-k [184,185], Random-k / Random Mask / Subsampling [140],
+probabilistic unbiased dropping (Wangni et al. [141]), fixed threshold
+(Strom [133]), adaptive-proportion threshold (Dryden et al. [142]),
+Sparse Binary Compression [188], Sparse Ternary Compression [189],
+ATOMO spectral sparsification [174], and variance-based sparsification
+(Tsuzuku et al. [206], approximated with mini-batch-free amplitude proxy).
+
+Top-k-style methods carry (values, int32 indices) payloads with *static* k —
+the TPU wire format (DESIGN.md §6).  Threshold methods cannot have static
+payload shapes; they transmit a dense masked tensor in simulation and
+account wire bits analytically from the realized sparsity (documented).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressed, register
+
+f32 = jnp.float32
+
+
+def _k_of(n: int, ratio: float, k: int) -> int:
+    if k:
+        return min(k, n)
+    return max(1, int(n * ratio))
+
+
+@register("topk")
+@dataclass
+class TopK:
+    """Deterministic top-k by magnitude [184,185]. Biased; satisfies the
+    k-contraction property (tested)."""
+
+    ratio: float = 0.01
+    k: int = 0
+    unbiased: bool = False
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        kk = _k_of(x.size, self.ratio, self.k)
+        vals, idx = jax.lax.top_k(jnp.abs(x), kk)
+        return Compressed({"values": x[idx], "indices": idx.astype(jnp.int32)}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return jnp.zeros((c.n,), f32).at[c.payload["indices"]].set(c.payload["values"])
+
+    def wire_bits(self, n) -> float:
+        kk = _k_of(n, self.ratio, self.k)
+        return kk * 64.0  # 32-bit value + 32-bit index
+
+
+@register("gtopk")
+@dataclass
+class GTopK(TopK):
+    """Shi et al. [191] gTop-k: workers send local top-k; after aggregation
+    the *global* vector is re-sparsified to k again, bounding the
+    master-to-workers payload. The re-sparsify step runs in the aggregator
+    (``re_sparsify`` attribute)."""
+
+    re_sparsify: bool = True
+
+
+@register("randomk")
+@dataclass
+class RandomK:
+    """Random-k selection [140,184]; with ``scale=True`` it is the unbiased
+    Subsampling estimator E[C(x)] = x (values scaled by n/k)."""
+
+    ratio: float = 0.01
+    k: int = 0
+    scale: bool = True
+    reduce_mode: str = "none"
+
+    @property
+    def unbiased(self) -> bool:
+        return self.scale
+
+    def compress(self, key, x) -> Compressed:
+        kk = _k_of(x.size, self.ratio, self.k)
+        # top-k of iid uniform scores == uniform k-subset, much cheaper than
+        # rejection-free sampling on large vectors
+        scores = jax.random.uniform(key, (x.size,))
+        _, idx = jax.lax.top_k(scores, kk)
+        idx = idx.astype(jnp.int32)
+        vals = x[idx]
+        if self.scale:
+            vals = vals * (x.size / kk)
+        return Compressed({"values": vals, "indices": idx}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return jnp.zeros((c.n,), f32).at[c.payload["indices"]].set(c.payload["values"])
+
+    def wire_bits(self, n) -> float:
+        return _k_of(n, self.ratio, self.k) * 64.0
+
+
+@register("wangni")
+@dataclass
+class WangniSparsifier:
+    """Wangni et al. [141]: drop coordinate i w.p. 1-p_i, amplify kept values
+    by 1/p_i; p_i = min(1, k|g_i|/sum|g|) targets expected budget k. Unbiased.
+    Variable support -> dense masked payload (analytic wire bits)."""
+
+    ratio: float = 0.01
+    unbiased: bool = True
+    reduce_mode: str = "sum"
+
+    def compress(self, key, x) -> Compressed:
+        k = max(1.0, x.size * self.ratio)
+        denom = jnp.maximum(jnp.sum(jnp.abs(x)), 1e-30)
+        p = jnp.minimum(1.0, k * jnp.abs(x) / denom)
+        keep = jax.random.uniform(key, x.shape) < p
+        vals = jnp.where(keep, x / jnp.maximum(p, 1e-30), 0.0)
+        return Compressed({"dense": vals, "nnz": jnp.sum(keep).astype(f32)[None]}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["dense"]
+
+    def wire_bits(self, n) -> float:
+        return max(1.0, n * self.ratio) * 64.0  # expected budget
+
+
+@register("threshold")
+@dataclass
+class FixedThreshold:
+    """Strom [133]: drop |g| < tau. Dense masked simulation; analytic wire
+    bits use the realized nnz (recorded in the payload for benchmarks)."""
+
+    tau: float = 1e-3
+    unbiased: bool = False
+    reduce_mode: str = "sum"
+
+    def compress(self, key, x) -> Compressed:
+        keep = jnp.abs(x) >= self.tau
+        return Compressed(
+            {"dense": jnp.where(keep, x, 0.0), "nnz": jnp.sum(keep).astype(f32)[None]},
+            x.size,
+        )
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["dense"]
+
+    def wire_bits(self, n) -> float:
+        return float("nan")  # data-dependent; benchmarks read payload["nnz"]
+
+
+@register("adaptive_threshold")
+@dataclass
+class AdaptiveThreshold:
+    """Dryden et al. [142]: keep a fixed *proportion* pi via the empirical
+    quantile of |g| — the compression ratio is constant across training."""
+
+    proportion: float = 0.01
+    unbiased: bool = False
+    reduce_mode: str = "sum"
+
+    def compress(self, key, x) -> Compressed:
+        tau = jnp.quantile(jnp.abs(x), 1.0 - self.proportion)
+        keep = jnp.abs(x) >= tau
+        return Compressed(
+            {"dense": jnp.where(keep, x, 0.0), "nnz": jnp.sum(keep).astype(f32)[None]},
+            x.size,
+        )
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["dense"]
+
+    def wire_bits(self, n) -> float:
+        return max(1.0, n * self.proportion) * 64.0
+
+
+@register("sbc")
+@dataclass
+class SparseBinaryCompression:
+    """Sattler et al. [188]: top-k, then keep only the dominant sign set and
+    replace magnitudes with its mean (1 bit + index per kept element)."""
+
+    ratio: float = 0.01
+    k: int = 0
+    unbiased: bool = False
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        kk = _k_of(x.size, self.ratio, self.k)
+        _, idx = jax.lax.top_k(jnp.abs(x), kk)
+        vals = x[idx]
+        pos = vals > 0
+        npos = jnp.maximum(jnp.sum(pos), 1)
+        nneg = jnp.maximum(jnp.sum(~pos), 1)
+        mu_pos = jnp.sum(jnp.where(pos, vals, 0.0)) / npos
+        mu_neg = -jnp.sum(jnp.where(pos, 0.0, vals)) / nneg
+        take_pos = mu_pos >= mu_neg
+        mu = jnp.where(take_pos, mu_pos, -mu_neg)
+        keep = pos == take_pos
+        out_vals = jnp.where(keep, mu, 0.0)
+        return Compressed({"values": out_vals, "indices": idx.astype(jnp.int32)}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        return jnp.zeros((c.n,), f32).at[c.payload["indices"]].set(c.payload["values"])
+
+    def wire_bits(self, n) -> float:
+        kk = _k_of(n, self.ratio, self.k)
+        return kk * 33.0 + 32  # index + 1 sign bit + shared magnitude
+
+
+@register("stc")
+@dataclass
+class SparseTernaryCompression:
+    """Sattler et al. [189]: top-k + ternarization (sign * mean magnitude)."""
+
+    ratio: float = 0.01
+    k: int = 0
+    unbiased: bool = False
+    reduce_mode: str = "none"
+
+    def compress(self, key, x) -> Compressed:
+        kk = _k_of(x.size, self.ratio, self.k)
+        _, idx = jax.lax.top_k(jnp.abs(x), kk)
+        vals = x[idx]
+        mu = jnp.mean(jnp.abs(vals))
+        return Compressed(
+            {"values": jnp.sign(vals) * mu, "indices": idx.astype(jnp.int32)}, x.size
+        )
+
+    def decompress(self, c) -> jax.Array:
+        return jnp.zeros((c.n,), f32).at[c.payload["indices"]].set(c.payload["values"])
+
+    def wire_bits(self, n) -> float:
+        kk = _k_of(n, self.ratio, self.k)
+        return kk * 34.0 + 32
+
+
+@register("atomo_svd")
+@dataclass
+class AtomoSVD:
+    """Wang et al. [174] Spectral-ATOMO: unbiased stochastic sparsification in
+    the SVD atomic basis.  Benchmarks/small-tensor use (SVD cost); tensors are
+    reshaped to the squarest 2D factorization."""
+
+    rank_budget: int = 4
+    unbiased: bool = True
+    reduce_mode: str = "none"
+
+    def _shape2d(self, n: int) -> tuple[int, int]:
+        r = int(n**0.5)
+        while n % r:
+            r -= 1
+        return r, n // r
+
+    def compress(self, key, x) -> Compressed:
+        n = x.size
+        a, b = self._shape2d(n)
+        M = x.reshape(a, b)
+        u, s, vt = jnp.linalg.svd(M, full_matrices=False)
+        # ATOMO probabilities: p_i = min(1, s_i * budget / sum(s))
+        p = jnp.minimum(1.0, s * self.rank_budget / jnp.maximum(jnp.sum(s), 1e-30))
+        keep = jax.random.uniform(key, s.shape) < p
+        s_hat = jnp.where(keep, s / jnp.maximum(p, 1e-30), 0.0)
+        r = min(self.rank_budget * 2, s.shape[0])
+        order = jnp.argsort(-s_hat)[:r]
+        return Compressed(
+            {
+                "u": u[:, order] * s_hat[order][None, :],
+                "vt": vt[order, :],
+            },
+            n,
+        )
+
+    def decompress(self, c) -> jax.Array:
+        M = c.payload["u"] @ c.payload["vt"]
+        return M.reshape(-1)
+
+    def wire_bits(self, n) -> float:
+        a, b = self._shape2d(n)
+        r = self.rank_budget * 2
+        return r * (a + b) * 32.0
+
+
+@register("variance_sparse")
+@dataclass
+class VarianceSparsifier:
+    """Tsuzuku et al. [206]: transmit only low-variance ("unambiguous")
+    coordinates.  Without per-sample gradients we use the |g|/sigma proxy
+    (amplitude relative to the tensor's noise scale)."""
+
+    z: float = 1.0  # keep if |g| > z * sigma
+    unbiased: bool = False
+    reduce_mode: str = "sum"
+
+    def compress(self, key, x) -> Compressed:
+        sigma = jnp.std(x) + 1e-30
+        keep = jnp.abs(x) > self.z * sigma
+        return Compressed(
+            {"dense": jnp.where(keep, x, 0.0), "nnz": jnp.sum(keep).astype(f32)[None]},
+            x.size,
+        )
+
+    def decompress(self, c) -> jax.Array:
+        return c.payload["dense"]
+
+    def wire_bits(self, n) -> float:
+        return float("nan")

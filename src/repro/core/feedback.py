@@ -1,0 +1,83 @@
+"""Auxiliary technologies (paper §IX): error accumulation / feedback,
+momentum correction, global momentum compression, local gradient clipping,
+and warm-up sparsity scheduling.
+
+All functions operate on *flat per-bucket vectors* (the aggregation layer
+flattens tensors/buckets) and on explicit state pytrees, so they compose
+with any compressor and live inside the jitted train step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CommConfig
+
+f32 = jnp.float32
+
+
+def init_comm_state(comm: CommConfig, flat_template: list[jax.Array]) -> dict[str, Any]:
+    """Per-worker communication state (EF residuals, momentum buffers)."""
+    state: dict[str, Any] = {}
+    if comm.error_feedback:
+        state["ef"] = [jnp.zeros_like(v) for v in flat_template]
+    if comm.momentum_correction:
+        state["u"] = [jnp.zeros_like(v) for v in flat_template]
+    return state
+
+
+def local_clip(g: jax.Array, thr: float, n_workers: int) -> jax.Array:
+    """Local Gradient Clipping [25] (§IX-C): each worker clips at
+    thr / sqrt(N) so the aggregated gradient keeps the global threshold."""
+    if not thr:
+        return g
+    local_thr = thr * (n_workers ** -0.5)
+    norm = jnp.linalg.norm(g)
+    return g * jnp.minimum(1.0, local_thr / jnp.maximum(norm, 1e-30))
+
+
+def warmup_ratio(base_ratio: float, step: jax.Array, warmup_steps: int) -> jax.Array:
+    """DGC warm-up [25] (§IX-D): sparsity ramps exponentially from 25% kept
+    to the target ratio over ``warmup_steps``.  NOTE: returns a *traced*
+    ratio — usable only by compressors that consume a dynamic budget
+    (wangni/threshold); top-k keeps static k and applies warm-up by masking.
+    """
+    if not warmup_steps:
+        return jnp.asarray(base_ratio, f32)
+    t = jnp.minimum(step.astype(f32) / warmup_steps, 1.0)
+    return jnp.exp(jnp.log(0.25) * (1 - t) + jnp.log(base_ratio) * t)
+
+
+def pre_compress(
+    comm: CommConfig,
+    g: jax.Array,
+    state: dict[str, Any],
+    idx: int,
+    n_workers: int,
+) -> jax.Array:
+    """Momentum correction + EF accumulation + local clipping (order per
+    DGC [25]): returns the vector handed to the compressor."""
+    if comm.momentum_correction:
+        u = comm.momentum_correction * state["u"][idx] + g
+        state["u"][idx] = u
+        g = u
+    g = local_clip(g, comm.local_clip, n_workers)
+    if comm.error_feedback:
+        g = state["ef"][idx] * comm.ef_decay + g
+    return g
+
+
+def post_compress(
+    comm: CommConfig,
+    g_in: jax.Array,
+    g_hat: jax.Array,
+    state: dict[str, Any],
+    idx: int,
+) -> None:
+    """Error accumulation update e = a - C(a) (§IX-A, eq. block)."""
+    if comm.error_feedback:
+        state["ef"][idx] = g_in - g_hat

@@ -1,0 +1,130 @@
+"""Gossip (decentralized) training (paper §IV-C).
+
+Runtime path (inside shard_map over the data axes): neighbor mixing via
+``ppermute`` on the mesh ring — D-PSGD [51], plus the compressed variants
+DCD-PSGD [54] and CHOCO-SGD [164].  The mixing matrix is the symmetric ring
+W = I(1-2w) + w(L+R), doubly stochastic with spectral gap rho < 1 (property
+tested).  Asynchronous gossip (SGP [53]) and arbitrary graphs live in the
+discrete-event simulator (`repro.core.simulate`) because SPMD programs are
+bulk-synchronous (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comms
+from repro.core.compression.base import Compressed
+from repro.core.types import CommConfig
+
+f32 = jnp.float32
+
+
+def ring_mixing_matrix(n: int, w: float = 1.0 / 3.0) -> np.ndarray:
+    """Symmetric doubly-stochastic ring weights (benchmark/consensus use)."""
+    W = np.eye(n) * (1 - 2 * w)
+    for j in range(n):
+        W[j, (j + 1) % n] += w
+        W[j, (j - 1) % n] += w
+    return W
+
+
+def exp_mixing_matrix(n: int) -> np.ndarray:
+    """One-peer exponential graph (powers of two), averaged over rounds."""
+    import math
+
+    rounds = max(1, int(math.log2(n)))
+    W = np.zeros((n, n))
+    for s in range(rounds):
+        stride = 2**s
+        Ws = np.eye(n) * 0.5
+        for j in range(n):
+            Ws[j, (j + stride) % n] += 0.5
+        W += Ws / rounds
+    return W
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    ev = np.sort(np.abs(np.linalg.eigvals(W)))[::-1]
+    return float(ev[1])
+
+
+def _neighbor_sum(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """left+right neighbors on the ring formed by the (flattened) data axes.
+    For multi-axis (pod,data) the ring runs within the innermost axis and
+    wraps across the pod axis boundary via the same ppermute on that axis."""
+    total = x
+    axis = axes[-1]  # ring within the innermost data axis
+    n = jax.lax.axis_size(axis)
+    right = [(j, (j + 1) % n) for j in range(n)]
+    left = [(j, (j - 1) % n) for j in range(n)]
+    return comms.ppermute(x, axis, right) + comms.ppermute(x, axis, left)
+
+
+def dpsgd_mix(params_flat: list[jax.Array], axes: tuple[str, ...], w: float = 1.0 / 3.0):
+    """D-PSGD [51]: x_i <- (1-2w) x_i + w (x_left + x_right)."""
+    return [(1 - 2 * w) * p + w * _neighbor_sum(p, axes) for p in params_flat]
+
+
+@dataclass
+class ChocoState:
+    """CHOCO-SGD [164] per-worker state: x_hat copies of self and the
+    neighbor-average of x_hat."""
+
+    x_hat: list[jax.Array]
+    x_hat_nbr: list[jax.Array]  # sum of neighbors' x_hat
+
+
+def choco_init(params_flat: list[jax.Array]) -> ChocoState:
+    return ChocoState(
+        [jnp.zeros_like(p) for p in params_flat],
+        [jnp.zeros_like(p) for p in params_flat],
+    )
+
+
+def choco_mix(
+    comm: CommConfig,
+    compressor,
+    key: jax.Array,
+    params_flat: list[jax.Array],
+    st: ChocoState,
+    axes: tuple[str, ...],
+    w: float = 1.0 / 3.0,
+) -> tuple[list[jax.Array], ChocoState]:
+    """One CHOCO-SGD communication round: exchange q = C(x - x_hat) with ring
+    neighbors; supports *biased* compressors (the method's point)."""
+    gamma = comm.gossip_step_size
+    new_x, new_hat, new_nbr = [], [], []
+    for i, (p, xh, xn) in enumerate(zip(params_flat, st.x_hat, st.x_hat_nbr)):
+        c = compressor.compress(jax.random.fold_in(key, i), (p - xh).reshape(-1))
+        q_self = compressor.decompress(c).reshape(p.shape)
+        # send the *payload* to both neighbors (wire = compressed)
+        q_nbr = _neighbor_sum_payload(compressor, c, axes).reshape(p.shape)
+        xh2 = xh + q_self
+        xn2 = xn + q_nbr
+        # x <- x + gamma * (sum_j w_ij xhat_j - xhat_i); ring: w on each nbr
+        p2 = p + gamma * (w * xn2 - 2 * w * xh2)
+        new_x.append(p2)
+        new_hat.append(xh2)
+        new_nbr.append(xn2)
+    return new_x, ChocoState(new_hat, new_nbr)
+
+
+def _neighbor_sum_payload(compressor, c: Compressed, axes: tuple[str, ...]) -> jax.Array:
+    """Sum of both neighbors' decompressed payloads, exchanging only the
+    compressed wire format."""
+    axis = axes[-1]
+    n = jax.lax.axis_size(axis)
+    right = [(j, (j + 1) % n) for j in range(n)]
+    left = [(j, (j - 1) % n) for j in range(n)]
+    total = None
+    for perm in (right, left):
+        payload = {k: comms.ppermute(v, axis, perm) for k, v in c.payload.items()}
+        dec = compressor.decompress(Compressed(payload, c.n))
+        total = dec if total is None else total + dec
+    return total

@@ -1,0 +1,90 @@
+"""Scheduling / pipelining of communication and computation (paper §VII).
+
+DAG cost model of one backward pass + gradient communication:
+
+* sequential: all communication after the full backward (no overlap);
+* WFBP [63,47]: layer l's all-reduce starts as soon as its gradient is
+  ready, overlapping with layer l-1's computation;
+* MG-WFBP [64]: WFBP + merging consecutive small tensors into buckets so
+  the per-message latency term stops dominating.
+
+The same bucket plan object drives the *runtime* (aggregate.make_bucket_plan)
+— this model predicts the iteration time each plan implies, and
+``benchmarks/schedule_table.py`` sweeps it (paper §VII discussion).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.costmodel import Link, allreduce_cost
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    grad_bytes: float
+    backward_time: float  # seconds
+
+
+def simulate_schedule(
+    layers: list[LayerSpec],
+    *,
+    n_workers: int,
+    link: Link = Link(),
+    alg: str = "ring",
+    mode: str = "wfbp",  # sequential | wfbp | mgwfbp
+    bucket_bytes: float = 0.0,
+) -> dict:
+    """Iteration time of backward+comm under the given schedule.
+
+    Backward runs last-layer-first; communication of a (merged) bucket can
+    start once every layer in it has produced its gradient, and messages
+    serialize on the network link (single NIC model).
+    """
+    # backward completes layer by layer (reverse order)
+    t = 0.0
+    ready = {}
+    for spec in reversed(layers):
+        t += spec.backward_time
+        ready[spec.name] = t
+    bwd_end = t
+
+    # build buckets
+    if mode == "sequential":
+        # per-layer messages, none started before the whole backward is done
+        buckets = [[s] for s in reversed(layers)]
+        start_rule = "all"
+    elif mode == "wfbp":
+        buckets = [[s] for s in reversed(layers)]
+        start_rule = "ready"
+    elif mode == "mgwfbp":
+        buckets, cur, size = [], [], 0.0
+        for s in reversed(layers):
+            cur.append(s)
+            size += s.grad_bytes
+            if size >= bucket_bytes:
+                buckets.append(cur)
+                cur, size = [], 0.0
+        if cur:
+            buckets.append(cur)
+        start_rule = "ready"
+    else:
+        raise ValueError(mode)
+
+    net_free = 0.0
+    finish = 0.0
+    for bucket in buckets:
+        nbytes = sum(s.grad_bytes for s in bucket)
+        ready_t = bwd_end if start_rule == "all" else max(ready[s.name] for s in bucket)
+        start = max(ready_t, net_free)
+        dur = allreduce_cost(alg, n_workers, nbytes, link)
+        net_free = start + dur
+        finish = net_free
+    return {
+        "iter_time": finish,
+        "bwd_time": bwd_end,
+        "comm_time": finish - bwd_end if finish > bwd_end else 0.0,
+        "n_messages": len(buckets),
+        "overlap_saving": (bwd_end + sum(allreduce_cost(alg, n_workers, sum(s.grad_bytes for s in b), link) for b in buckets)) - finish,
+    }

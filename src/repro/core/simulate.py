@@ -1,0 +1,281 @@
+"""Discrete-event and multi-worker training simulators.
+
+Two engines:
+
+1. :func:`simulate_timeline` — discrete-event model of n workers with a
+   straggler distribution under BSP / SSP(s) / ASP / Local-SGD(H) and a
+   PS / All-Reduce / Gossip communication model (alpha-beta costs, PS
+   congestion).  Regenerates the paper's Fig. 4 timelines and the
+   Table II qualitative matrix quantitatively.
+
+2. :func:`simulate_training` — an *exact* (not event-driven) multi-worker
+   SGD simulator: n virtual workers vectorized with vmap, supporting
+   stale/asynchronous updates via gradient delay buffers, all four sync
+   schemes, PS vs gossip topologies, and any compressor (+EF).  Used for
+   the convergence-rate benchmarks (paper §VIII, Table IV) on convex
+   (quadratic/logistic) and non-convex (small MLP) objectives — this is the
+   substrate for validating the survey's convergence claims empirically.
+
+Both engines are deliberately CPU-friendly (no mesh needed).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# 1. Discrete-event timeline simulator (Fig. 4 / Table II).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TimelineCfg:
+    n_workers: int = 16
+    iters: int = 200
+    compute_mean: float = 1.0  # per-iteration compute time
+    straggler_sigma: float = 0.2  # lognormal sigma
+    straggler_worker_slowdown: float = 1.0  # multiplicative slowdown of worker 0
+    # alpha-beta communication model (paper Table III)
+    alpha: float = 1e-3  # per-message latency (s)
+    beta: float = 1e-9  # per-byte time (s/B)  ~ 1 GB/s links
+    msg_bytes: float = 4 * 25e6  # 25M-param f32 model/gradient
+    server_bw_share: bool = True  # PS congestion: uploads share server link
+    sync: str = "bsp"  # bsp | ssp | asp | local
+    staleness: int = 3  # SSP bound
+    local_steps: int = 8  # Local SGD H
+    arch: str = "ps"  # ps | allreduce | gossip
+    seed: int = 0
+
+
+@dataclass
+class TimelineResult:
+    finish_times: np.ndarray  # (workers, iters) completion wall-clock
+    throughput: float  # global iterations/sec
+    idle_frac: float
+    mean_staleness: float
+    comm_frac: float
+
+    def row(self) -> dict:
+        return {
+            "throughput": self.throughput,
+            "idle_frac": self.idle_frac,
+            "mean_staleness": self.mean_staleness,
+            "comm_frac": self.comm_frac,
+        }
+
+
+def _comm_time(cfg: TimelineCfg, concurrent: int) -> float:
+    """Per-iteration communication time under the architecture model."""
+    a, b, N = cfg.alpha, cfg.beta, cfg.msg_bytes
+    n = cfg.n_workers
+    if cfg.arch == "ps":
+        # upload + download; server link shared by `concurrent` workers
+        share = max(1, concurrent) if cfg.server_bw_share else 1
+        return 2 * (a + b * N * share)
+    if cfg.arch == "allreduce":
+        # ring: 2(n-1) alpha + 2 (n-1)/n beta N   (Table III)
+        return 2 * (n - 1) * a + 2 * (n - 1) / n * b * N
+    if cfg.arch == "gossip":
+        return 2 * (a + b * N)  # exchange with 2 neighbors (parallel links)
+    raise ValueError(cfg.arch)
+
+
+def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
+    rng = np.random.default_rng(cfg.seed)
+    n, T = cfg.n_workers, cfg.iters
+    compute = rng.lognormal(np.log(cfg.compute_mean), cfg.straggler_sigma, (n, T))
+    compute[0] *= cfg.straggler_worker_slowdown
+    finish = np.zeros((n, T))
+    t = np.zeros(n)  # current wall-clock per worker
+    done = np.zeros(n, dtype=int)  # iterations completed
+    comm_total = np.zeros(n)
+    stale_samples = []
+
+    if cfg.sync == "bsp":
+        for it in range(T):
+            t_comp = t + compute[:, it]
+            barrier = t_comp.max()
+            c = _comm_time(cfg, concurrent=n)
+            t = np.full(n, barrier + c)
+            comm_total += (t - t_comp)
+            finish[:, it] = t
+            stale_samples.append(0.0)
+    elif cfg.sync == "local":
+        for it in range(T):
+            t = t + compute[:, it]
+            finish[:, it] = t
+            if (it + 1) % cfg.local_steps == 0:
+                barrier = t.max()
+                c = _comm_time(cfg, concurrent=n)
+                comm_total += barrier + c - t
+                t = np.full(n, barrier + c)
+                finish[:, it] = t
+            stale_samples.append(0.0)
+    else:  # ssp / asp: event-driven per worker
+        # each worker proceeds; SSP blocks if ahead of slowest by > s
+        c_one = _comm_time(cfg, concurrent=max(1, n // 4))  # partial congestion
+        for step in range(T * n):
+            i = int(np.argmin(t + (done >= T) * 1e18))
+            if done[i] >= T:
+                break
+            if cfg.sync == "ssp":
+                lag = done[i] - done.min()
+                if lag > cfg.staleness:
+                    # wait until the slowest finishes one more iteration
+                    j = int(np.argmin(done))
+                    wait = max(0.0, t[j] + compute[j, min(done[j], T - 1)] - t[i])
+                    t[i] += wait
+            start = t[i]
+            t[i] += compute[i, done[i]] + c_one
+            comm_total[i] += c_one
+            finish[i, done[i]] = t[i]
+            stale_samples.append(done[i] - done.min())
+            done[i] += 1
+
+    makespan = finish.max()
+    total_iters = (finish > 0).sum()
+    busy = compute[:, : finish.shape[1]].sum()
+    return TimelineResult(
+        finish_times=finish,
+        throughput=total_iters / makespan,
+        idle_frac=float(1.0 - busy / (makespan * n)),
+        mean_staleness=float(np.mean(stale_samples)),
+        comm_frac=float(comm_total.sum() / (makespan * n)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. Multi-worker SGD simulator (convergence studies, §VIII).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimCfg:
+    n_workers: int = 8
+    sync: str = "bsp"  # bsp | ssp | asp | local | gossip
+    staleness: int = 4  # fixed delay for asp; max advance for ssp
+    local_steps: int = 8
+    compressor: Any = None  # repro.core.compression instance
+    error_feedback: bool = False
+    lr: float = 0.05
+    steps: int = 300
+    seed: int = 0
+    gossip_w: float = 1.0 / 3.0
+
+
+def quadratic_problem(dim: int = 64, n_workers: int = 8, noise: float = 0.1, seed: int = 0):
+    """f_i(x) = 1/2 (x-b_i)^T A (x-b_i): strongly convex with worker
+    heterogeneity; f* and x* known in closed form."""
+    rng = np.random.default_rng(seed)
+    evals = np.linspace(0.5, 5.0, dim)
+    Q = np.linalg.qr(rng.normal(size=(dim, dim)))[0]
+    A = jnp.asarray(Q @ np.diag(evals) @ Q.T, f32)
+    b = jnp.asarray(rng.normal(size=(n_workers, dim)) * 1.0, f32)
+
+    def grad(x, i, key):
+        g = A @ (x - b[i])
+        return g + noise * jax.random.normal(key, x.shape)
+
+    def loss(x):
+        d = x[None, :] - b
+        return 0.5 * jnp.mean(jnp.einsum("nd,de,ne->n", d, A, d))
+
+    x_star = jnp.mean(b, axis=0)
+    return grad, loss, jnp.zeros((dim,), f32), x_star
+
+
+def simulate_training(cfg: SimCfg, problem=None) -> dict[str, np.ndarray]:
+    """Exact simulation of n workers under the chosen sync/topology/compressor.
+
+    Returns {"loss": (steps,), "consensus": (steps,), "bits": (steps,)} —
+    loss of the (mean) model, worker disagreement, cumulative upload bits.
+    """
+    grad_fn, loss_fn, x0, x_star = problem or quadratic_problem(n_workers=cfg.n_workers, seed=cfg.seed)
+    n = cfg.n_workers
+    dim = x0.size
+    comp = cfg.compressor
+
+    X = jnp.tile(x0[None], (n, 1))  # per-worker models
+    ef = jnp.zeros((n, dim), f32)
+    delay_buf = jnp.zeros((cfg.staleness + 1, n, dim), f32)  # asp delay line
+    key = jax.random.key(cfg.seed)
+
+    W = None
+    if cfg.sync == "gossip":
+        from repro.core.gossip import ring_mixing_matrix
+
+        W = jnp.asarray(ring_mixing_matrix(n, cfg.gossip_w), f32)
+
+    losses, consensus, bits = [], [], []
+    total_bits = 0.0
+
+    def compress_all(keys, G, ef):
+        if comp is None:
+            return G, ef, 0.0
+        a = G + ef if cfg.error_feedback else G
+        out, hats = [], []
+        for i in range(n):
+            c = comp.compress(keys[i], a[i])
+            hat = comp.decompress(c)
+            out.append(hat)
+            hats.append(hat)
+        out = jnp.stack(out)
+        new_ef = (a - out) if cfg.error_feedback else ef
+        wb = comp.wire_bits(dim)
+        wb = 0.0 if wb != wb else wb  # NaN (data-dependent) -> 0 here
+        return out, new_ef, wb * n
+
+    for t in range(cfg.steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        gkeys = jax.random.split(k1, n)
+        ckeys = jax.random.split(k2, n)
+        G = jnp.stack([grad_fn(X[i], i, gkeys[i]) for i in range(n)])
+
+        if cfg.sync in ("bsp", "local", "ssp", "asp"):
+            if cfg.sync == "asp":
+                # apply the gradient that is `staleness` steps old
+                delay_buf = jnp.roll(delay_buf, 1, axis=0).at[0].set(G)
+                G_eff = delay_buf[-1]
+            elif cfg.sync == "ssp":
+                # workers alternate being ahead: even workers' grads delayed 1..s
+                delay_buf = jnp.roll(delay_buf, 1, axis=0).at[0].set(G)
+                d = np.arange(n) % (cfg.staleness + 1)
+                G_eff = jnp.stack([delay_buf[d[i], i] for i in range(n)])
+            else:
+                G_eff = G
+            Ghat, ef, wb = compress_all(ckeys, G_eff, ef)
+            total_bits += wb
+            if cfg.sync == "local":
+                X = X - cfg.lr * Ghat
+                if (t + 1) % cfg.local_steps == 0:
+                    X = jnp.tile(jnp.mean(X, axis=0)[None], (n, 1))
+                    total_bits += 32.0 * dim * n
+            else:
+                gbar = jnp.mean(Ghat, axis=0)
+                X = X - cfg.lr * gbar[None, :]
+        elif cfg.sync == "gossip":
+            Ghat, ef, wb = compress_all(ckeys, G, ef)
+            total_bits += wb
+            X = W @ (X - cfg.lr * Ghat)
+        else:
+            raise ValueError(cfg.sync)
+
+        xbar = jnp.mean(X, axis=0)
+        losses.append(float(loss_fn(xbar)))
+        consensus.append(float(jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1))))
+        bits.append(total_bits)
+
+    return {
+        "loss": np.asarray(losses),
+        "consensus": np.asarray(consensus),
+        "bits": np.asarray(bits),
+        "x_star_err": float(jnp.linalg.norm(jnp.mean(X, 0) - x_star)),
+    }

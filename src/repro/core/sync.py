@@ -1,0 +1,61 @@
+"""Synchronization schemes (paper §III) — runtime side.
+
+BSP aggregates gradients every step (``aggregate.aggregate_gradients``).
+Local SGD [73] runs H local steps then averages *parameters*; post-local SGD
+[121] switches from BSP to Local SGD at a given step.  On the multi-pod mesh
+the ``pod`` axis can be designated the Local-SGD boundary (synchronous
+inside a pod, periodic across pods) — the practical TPU realization of the
+survey's loose-synchronization methods (DESIGN.md §2).
+
+SSP/ASP cannot exist inside one SPMD program; they are modeled faithfully in
+``repro.core.simulate`` and compared in the benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives, comms
+from repro.core.types import CommConfig
+
+
+def grads_need_aggregation(comm: CommConfig, step: int) -> bool:
+    """Python-level decision: does this step's train_step aggregate grads?"""
+    if comm.pod_local:
+        return True  # BSP inside each pod every step
+    if comm.sync == "bsp":
+        return True
+    if comm.sync == "post_local":
+        return step < comm.post_local_switch or _is_sync_step(step, comm.local_steps)
+    if comm.sync == "local":
+        return False  # local SGD averages parameters, not gradients
+    raise ValueError(comm.sync)
+
+
+def params_need_sync(comm: CommConfig, step: int) -> bool:
+    if comm.pod_local:
+        return _is_sync_step(step, comm.local_steps)  # DCN boundary sync
+    if comm.sync == "local":
+        return _is_sync_step(step, comm.local_steps)
+    if comm.sync == "post_local":
+        return step >= comm.post_local_switch and _is_sync_step(step, comm.local_steps)
+    return False
+
+
+def _is_sync_step(step: int, H: int) -> bool:
+    return H > 0 and (step + 1) % H == 0
+
+
+def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla") -> Any:
+    """Model averaging for Local SGD (Eq. 9, sync branch)."""
+    n = 1
+    for axn in axes:
+        n *= jax.lax.axis_size(axn)
+    with comms.tag("local_sgd_sync"):
+        return jax.tree.map(
+            lambda p: (collectives.allreduce(p.astype(jnp.float32), axes, impl=impl) / n).astype(p.dtype),
+            params,
+        )

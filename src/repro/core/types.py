@@ -1,0 +1,51 @@
+"""Communication configuration — one knob per taxonomy dimension (Table I)."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class CommConfig:
+    # --- compression (paper §V/§VI) ------------------------------------------
+    compressor: str = "none"  # see repro.core.compression registry
+    compressor_kwargs: dict[str, Any] = field(default_factory=dict)
+    #: per-tensor rules: list of (substring, compressor_name|"none", kwargs);
+    #: first match wins. Lets e.g. SSM decay params skip compression
+    #: (DESIGN.md §Arch-applicability) or layers use different k [92].
+    per_tensor_rules: list = field(default_factory=list)
+
+    # --- auxiliary technologies (paper §IX) -----------------------------------
+    error_feedback: bool = False  # §IX-A error accumulation
+    ef_decay: float = 1.0  # 1.0 = classic EF; <1 decays residuals
+    momentum_correction: float = 0.0  # §IX-B DGC momentum m (0 = off)
+    local_clip: float = 0.0  # §IX-C local gradient clipping threshold (0 = off)
+    warmup_steps: int = 0  # §IX-D sparsity warm-up (exponential ramp)
+
+    # --- synchronization (paper §III) ------------------------------------------
+    sync: str = "bsp"  # bsp | local | post_local
+    local_steps: int = 1  # H for local SGD
+    post_local_switch: int = 0  # step at which post-local switches bsp->local
+    #: multi-pod: aggregate gradients only WITHIN each pod every step (BSP on
+    #: ICI) and average parameters ACROSS pods every `local_steps` (local SGD
+    #: on the slow DCN boundary) — the survey's §III-D at pod scale.
+    pod_local: bool = False
+
+    # --- architecture / collectives (paper §IV) ---------------------------------
+    aggregator: str = "allreduce"  # allreduce | gossip
+    collective: str = "xla"  # xla | ring | rhd (manual ppermute schedules)
+    gossip_graph: str = "ring"  # ring | exp (exponential peers)
+    gossip_compress: str = "none"  # choco | dcd | none
+    gossip_step_size: float = 0.5  # CHOCO-SGD gamma
+
+    # --- scheduling (paper §VII) -------------------------------------------------
+    bucket_mb: float = 0.0  # 0 = per-tensor; >0 = MG-WFBP-style fused buckets
+    agg_dtype: str = "float32"  # bucket dtype for the dense path ("bfloat16" halves wire)
+
+    def with_updates(self, **kw) -> "CommConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DENSE = CommConfig()

@@ -1,0 +1,122 @@
+"""jit'd wrappers around the Pallas kernels: flat-vector API, padding and
+(rows, 128)-lane reshaping, backend dispatch (interpret=True off-TPU so the
+same code validates on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import qsgd as _qsgd
+from repro.kernels import qsgd_ef as _qsgd_ef
+from repro.kernels import sign_pack as _sign
+from repro.kernels import terngrad as _tern
+from repro.kernels import threshold_sparsify as _thr
+from repro.kernels import wkv6 as _wkv
+
+f32 = jnp.float32
+_TILE = _qsgd.BLOCK_ROWS * _qsgd.LANES  # elements per full block
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to2d(x: jax.Array) -> tuple[jax.Array, int]:
+    n = x.size
+    pad = (-n) % _TILE
+    xp = jnp.pad(x.reshape(-1), (0, pad))
+    return xp.reshape(-1, _qsgd.LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def qsgd_quantize(x: jax.Array, u: jax.Array, *, levels: int = 16) -> tuple[jax.Array, jax.Array]:
+    """Flat x, uniform noise u -> (codes int8 (n,), norm (1,) f32)."""
+    norm = jnp.maximum(jnp.linalg.norm(x.astype(f32)), 1e-30)
+    x2, n = _to2d(x.astype(f32))
+    u2, _ = _to2d(u.astype(f32))
+    codes = _qsgd.qsgd_2d(x2, u2, (1.0 / norm).reshape(1, 1), levels=levels,
+                          interpret=_interpret())
+    return codes.reshape(-1)[:n], norm[None]
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "decay"))
+def qsgd_ef_fused(g: jax.Array, e: jax.Array, u: jax.Array, *, levels: int = 16,
+                  decay: float = 1.0):
+    """Fused EF+quantize: returns (codes (n,) int8, norm (1,), e_new (n,))."""
+    a_norm = jnp.maximum(jnp.linalg.norm((e * decay + g).astype(f32)), 1e-30)
+    g2, n = _to2d(g.astype(f32))
+    e2, _ = _to2d(e.astype(f32))
+    u2, _ = _to2d(u.astype(f32))
+    codes, enew = _qsgd_ef.qsgd_ef_2d(
+        g2, e2, u2, (1.0 / a_norm).reshape(1, 1), levels=levels, decay=decay,
+        interpret=_interpret(),
+    )
+    return codes.reshape(-1)[:n], a_norm[None], enew.reshape(-1)[:n]
+
+
+@jax.jit
+def terngrad_quantize(x: jax.Array, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    smax = jnp.maximum(jnp.max(jnp.abs(x.astype(f32))), 1e-30)
+    x2, n = _to2d(x.astype(f32))
+    u2, _ = _to2d(u.astype(f32))
+    tern = _tern.terngrad_2d(x2, u2, (1.0 / smax).reshape(1, 1), interpret=_interpret())
+    return tern.reshape(-1)[:n], smax[None]
+
+
+@jax.jit
+def sign_pack(x: jax.Array) -> jax.Array:
+    """Flat f32 (n,) -> uint8 bitmap, lane-interleaved layout (TPU-friendly
+    last-dim-128 tiling).  Returns the full padded byte array — unpack with
+    ``sign_unpack(packed, n)``; pad overhead is < one tile."""
+    n = x.size
+    lane_tile = _sign.BLOCK_ROWS * 8 * _sign.LANES
+    pad = (-n) % lane_tile
+    xp = jnp.pad(x.reshape(-1), (0, pad), constant_values=1.0)
+    x3 = xp.reshape(-1, 8, _sign.LANES)
+    packed = _sign.sign_pack_3d(x3, interpret=_interpret())
+    return packed.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sign_unpack(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of sign_pack (same interleaved layout)."""
+    x3 = _sign.sign_unpack_3d(packed.reshape(-1, _sign.LANES), interpret=_interpret())
+    return x3.reshape(-1)[:n]
+
+
+@jax.jit
+def threshold_sparsify(x: jax.Array, tau: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (masked (n,), nnz scalar int32)."""
+    x2, n = _to2d(x.astype(f32))
+    vals, cnts = _thr.threshold_2d(x2, jnp.asarray(tau, f32).reshape(1, 1),
+                                   interpret=_interpret())
+    # padded tail contributes zeros (|0| >= tau only if tau<=0; guard)
+    masked = vals.reshape(-1)[:n]
+    nnz = jnp.sum(jnp.abs(masked) > 0).astype(jnp.int32)
+    return masked, nnz
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+         s0: jax.Array, *, chunk: int = 64):
+    """(B,S,H,hd) inputs, u (H,hd), s0 (B,H,hd,hd) -> (y (B,S,H,hd), sT)."""
+    B, S, H, hd = r.shape
+    pad = (-S) % chunk
+
+    def prep(t):
+        tp = jnp.pad(t.astype(f32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return jnp.moveaxis(tp, 2, 1).reshape(B * H, S + pad, hd)
+
+    rr, kk, vv = prep(r), prep(k), prep(v)
+    # pad decay with 1.0 (identity for state)
+    wp = jnp.pad(w.astype(f32), ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    ww = jnp.moveaxis(wp, 2, 1).reshape(B * H, S + pad, hd)
+    uu = jnp.broadcast_to(u.astype(f32)[None], (B, H, hd)).reshape(B * H, hd)
+    ss = s0.astype(f32).reshape(B * H, hd, hd)
+    y, sT = _wkv.wkv6_chunked(rr, kk, vv, ww, uu, ss, chunk=chunk,
+                              interpret=_interpret())
+    y = jnp.moveaxis(y.reshape(B, H, S + pad, hd), 1, 2)[:, :S]
+    return y, sT.reshape(B, H, hd, hd)

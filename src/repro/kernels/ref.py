@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in
+tests/test_kernels.py across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def qsgd_ref(x: jax.Array, u: jax.Array, norm: jax.Array, levels: int) -> jax.Array:
+    """Stochastic dithering codes: sign(x) * level, |level| <= levels (int8)."""
+    y = jnp.abs(x).astype(f32) / jnp.maximum(norm, 1e-30) * levels
+    l = jnp.floor(y)
+    l = l + (u < (y - l))
+    return (jnp.sign(x) * l).astype(jnp.int8)
+
+
+def qsgd_ef_ref(
+    g: jax.Array, e: jax.Array, u: jax.Array, norm: jax.Array, levels: int, decay: float
+) -> tuple[jax.Array, jax.Array]:
+    """Fused: a = e*decay + g; code = Q(a); e_new = a - deQ(code)."""
+    a = e.astype(f32) * decay + g.astype(f32)
+    code = qsgd_ref(a, u, norm, levels)
+    deq = code.astype(f32) / levels * norm
+    return code, a - deq
+
+
+def terngrad_ref(x: jax.Array, u: jax.Array, smax: jax.Array) -> jax.Array:
+    p = jnp.abs(x).astype(f32) / jnp.maximum(smax, 1e-30)
+    b = (u < p).astype(jnp.int8)
+    return (jnp.sign(x).astype(jnp.int8) * b).astype(jnp.int8)
+
+
+def sign_pack_ref(x: jax.Array) -> jax.Array:
+    """x (..., 8k) f32 -> (..., k) uint8 bitmap (bit=1 means x>=0)."""
+    bits = (x >= 0).astype(jnp.uint8)
+    b = bits.reshape(*x.shape[:-1], -1, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
+
+
+def sign_unpack_ref(packed: jax.Array) -> jax.Array:
+    """(..., k) uint8 -> (..., 8k) f32 in {-1, +1}."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & 1
+    signs = bits.astype(f32) * 2.0 - 1.0
+    return signs.reshape(*packed.shape[:-1], -1)
+
+
+def threshold_ref(x: jax.Array, tau: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(masked values, per-row kept counts (int32))."""
+    keep = jnp.abs(x) >= tau
+    return jnp.where(keep, x, 0.0), jnp.sum(keep, axis=-1, dtype=jnp.int32)
+
+
+def wkv6_ref(
+    r: jax.Array,  # (B, S, H, hd) f32
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0,1)
+    u: jax.Array,  # (H, hd)
+    s0: jax.Array,  # (B, H, hd, hd)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV6 (same math as repro.models.rwkv.wkv_scan)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    seq = tuple(jnp.moveaxis(t.astype(f32), 1, 0) for t in (r, k, v, w))
+    S, ys = jax.lax.scan(step, s0.astype(f32), seq)
+    return jnp.moveaxis(ys, 0, 1), S

@@ -1,0 +1,152 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16 / chip)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s / chip)
+    collective = collective_bytes / (links x bw)   (~50 GB/s per ICI link)
+
+``HLO_FLOPs``/``HLO_bytes`` come from ``compiled.cost_analysis()`` (the
+per-device SPMD module).  ``collective_bytes`` has two independent sources:
+  * primary: the comms-wrapper capture (exact, loop-aware, design-coupled);
+  * cross-check: summing operand bytes of collective ops in the optimized
+    HLO text (upper-bounds loop bodies by their trip count where the
+    enclosing while can be matched; reported raw otherwise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s per link
+ICI_LINKS = 2  # effective links engaged per collective phase (2D torus ring dims)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per device
+    hbm_bytes: float
+    coll_bytes: float  # per device, from comms capture
+    coll_bytes_hlo: float  # cross-check (static HLO text, no loop multiplicity)
+    coll_by_kind: dict
+    backward_factor: float = 1.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes * self.backward_factor / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_bytes_hlo": self.coll_bytes_hlo,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\w[\w\d]*\[[^\]]*\])(?:\{[^}]*\})?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_collective_bytes(hlo_text: str) -> tuple[float, dict]:
+    """Sum output-shape bytes of collective ops in optimized HLO text.
+    Static count — ops inside while bodies counted once (cross-check only).
+    """
+    total = 0.0
+    by_kind: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        nbytes = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        total += nbytes
+        by_kind[kind] = by_kind.get(kind, 0.0) + nbytes
+    return total, by_kind
+
+
+def extract(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    compiled,
+    comm_log,
+    *,
+    backward_factor: float = 1.0,
+) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older API returned [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    hlo_bytes, _ = hlo_collective_bytes(compiled.as_text())
+    # the AD-transpose collective twins only exist for the forward-pass TP
+    # collectives (untagged); gradient aggregation / zero1 / sync run outside
+    # AD and are counted once
+    weighted = sum(
+        r.wire_bytes * r.mult * (backward_factor if not r.tag else 1.0)
+        for r in comm_log.records
+    )
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=weighted,
+        coll_bytes_hlo=hlo_bytes,
+        coll_by_kind=comm_log.by_kind(),
+        backward_factor=1.0,
+    )

@@ -1,0 +1,8 @@
+from repro.models.sharding import AxisCtx, ShapePlan, make_plan  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    abstract_params,
+    decode_step,
+    forward_loss,
+    init_params,
+    prefill,
+)

@@ -1,0 +1,171 @@
+"""RWKV6 ("Finch") block [arXiv:2404.05892] — attention-free time mixing with
+data-dependent decay, plus the RWKV channel-mix FFN.
+
+Tensor parallelism: RWKV heads are sharded over the model axis (the WKV
+recurrence is fully head-local); the output projections are row-parallel
+with one ``psum``.  TPU adaptation (see DESIGN.md): head_dim is chosen so
+the head count divides the model axis (e.g. 80 → 32 heads for d=2560)
+instead of the GPU default 64 → 40 heads; otherwise heads are zero-padded.
+
+State per head: S ∈ R^{hd×hd} with
+    y_t[j]   = Σ_i r_t[i] (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t[i,j] = w_t[i] S_{t-1}[i,j] + k_t[i] v_t[j]
+and w_t = exp(-exp(w0 + lora_w(x_t))) the data-dependent decay.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import comms
+from repro.core.comms import psum
+from repro.models.layers import rmsnorm, rmsnorm_def
+from repro.models.sharding import AxisCtx, ParamDef, ShapePlan
+
+f32 = jnp.float32
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def rwkv_defs(cfg: ModelConfig, plan: ShapePlan) -> dict[str, Any]:
+    d = plan.d
+    H, hd = plan.rwkv_heads, plan.rwkv_hd
+    att = H * hd  # padded attention width
+    lora = cfg.rwkv_decay_lora
+    mix = cfg.rwkv_mix_lora
+    defs: dict[str, Any] = {
+        # token-shift ddlerp: mu_x + per-channel lora-modulated interpolation
+        "mu_base": ParamDef((d,), P(None), init="zeros"),
+        "mu": ParamDef((5, d), P(None, None), init="zeros"),
+        "mix_A": ParamDef((d, 5 * mix), P(None, None), init="small"),
+        "mix_B": ParamDef((5, mix, d), P(None, None, None), init="small"),
+        # projections (column-parallel over heads)
+        "wr": ParamDef((d, H, hd), P(None, "model", None)),
+        "wk": ParamDef((d, H, hd), P(None, "model", None)),
+        "wv": ParamDef((d, H, hd), P(None, "model", None)),
+        "wg": ParamDef((d, H, hd), P(None, "model", None)),
+        # decay: w0 + tanh(x A_w) B_w (per attention channel)
+        "w0": ParamDef((H, hd), P("model", None), init="zeros"),
+        "wd_A": ParamDef((d, lora), P(None, None), init="small"),
+        "wd_B": ParamDef((lora, H, hd), P(None, "model", None), init="small"),
+        "u": ParamDef((H, hd), P("model", None), init="small"),  # bonus
+        "ln_y": rmsnorm_def(hd),  # per-head group norm
+        "wo": ParamDef((H, hd, d), P("model", None, None)),
+        # channel mix
+        "cm_mu_k": ParamDef((d,), P(None), init="zeros"),
+        "cm_mu_r": ParamDef((d,), P(None), init="zeros"),
+        "cm_wk": ParamDef((d, plan.Dff), P(None, "model")),
+        "cm_wv": ParamDef((plan.Dff, d), P("model", None)),
+        "cm_wr": ParamDef((d, d), P(None, None)),
+    }
+    return defs
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x: (B,S,d); last: (B,d) previous token (zero at t=0). Returns x_{t-1}."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict[str, Any], x: jax.Array, shifted: jax.Array) -> list[jax.Array]:
+    """Data-dependent lerp between x_t and x_{t-1} for the 5 streams."""
+    dx = shifted - x
+    base = x + dx * p["mu_base"]
+    mix = jnp.tanh(jnp.einsum("bsd,dm->bsm", base, p["mix_A"]))
+    mix = mix.reshape(*mix.shape[:-1], 5, -1)
+    delta = jnp.einsum("bsnm,nmd->bsnd", mix, p["mix_B"])  # (B,S,5,d)
+    outs = []
+    for i in range(5):
+        outs.append(x + dx * (p["mu"][i] + delta[..., i, :]))
+    return outs
+
+
+def wkv_scan(
+    r: jax.Array,  # (B,S,H,hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # (B,S,H,hd) decay in (0,1)
+    u: jax.Array,  # (H,hd)
+    state: jax.Array,  # (B,H,hd,hd)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV6 recurrence (reference path; the Pallas kernel in
+    repro.kernels.wkv6 implements the chunked parallel form)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(t.astype(f32), 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(f32), (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state  # (B,S,H,hd), (B,H,hd,hd)
+
+
+def rwkv_block(
+    cfg: ModelConfig,
+    p: dict[str, Any],
+    x: jax.Array,  # (B,S,d)
+    ax: AxisCtx,
+    state: dict[str, jax.Array] | None = None,
+    *,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Time-mix sub-block. state: {"shift": (B,d), "wkv": (B,H_l,hd,hd)}."""
+    B, S, d = x.shape
+    H_l, hd = p["w0"].shape
+    if state is None:
+        state = {
+            "shift": jnp.zeros((B, d), x.dtype),
+            "wkv": comms.varying(jnp.zeros((B, H_l, hd, hd), f32), ax.all),
+        }
+    shifted = _token_shift(x, state["shift"])
+    xr, xk, xv, xw, xg = _ddlerp(p, x, shifted)
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"])
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["wg"])
+    dec = p["w0"] + jnp.einsum(
+        "bsl,lhk->bshk", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["wd_A"])), p["wd_B"]
+    )
+    w = jnp.exp(-jnp.exp(dec.astype(f32)))
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y, wkv = kops.wkv6(r, k, v, w, p["u"], state["wkv"])
+    else:
+        y, wkv = wkv_scan(r, k, v, w, p["u"].astype(f32), state["wkv"])
+    # per-head norm; eps scaled like RWKV's GroupNorm (64e-5 * head_dim basis)
+    y = rmsnorm(p["ln_y"], y.astype(x.dtype), eps=1e-3)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    out = psum(out, ax.model)
+    new_state = {"shift": x[:, -1], "wkv": wkv}
+    return out, new_state
+
+
+def rwkv_channel_mix(
+    cfg: ModelConfig,
+    p: dict[str, Any],
+    x: jax.Array,
+    ax: AxisCtx,
+    last: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """RWKV FFN: squared-relu key path with sigmoid receptance gate."""
+    B, S, d = x.shape
+    if last is None:
+        last = jnp.zeros((B, d), x.dtype)
+    shifted = _token_shift(x, last)
+    dx = shifted - x
+    xk = x + dx * p["cm_mu_k"]
+    xr = x + dx * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_wk"])))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"])
+    vv = psum(vv, ax.model)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"]))
+    return r * vv, x[:, -1]

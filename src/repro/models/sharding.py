@@ -1,0 +1,190 @@
+"""Sharding plan: mesh axes, padded dimensions, parameter definitions.
+
+The whole runtime executes inside a single ``jax.shard_map`` that is
+*manual* over every mesh axis (``pod``/``data``/``model``).  All collectives
+are therefore explicit in model code (Megatron-style tensor parallelism,
+expert parallelism, context-parallel decode), which is what lets the
+roofline analysis account for every byte on the wire — the subject of the
+paper.
+
+``ShapePlan`` resolves the *padded* tensor dimensions for a given model-axis
+size (heads padded up to a multiple of the axis, vocab padded, experts must
+divide).  ``ParamDef`` trees describe every parameter once; abstract shapes,
+PartitionSpecs and materialized initializations all derive from the same
+tree so they can never disagree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+@dataclass(frozen=True)
+class AxisCtx:
+    """Mesh axis names seen by model code inside shard_map."""
+
+    data: tuple[str, ...] = (DATA_AXIS,)  # gradient/batch axes ("pod","data") multi-pod
+    model: str = MODEL_AXIS
+
+    @property
+    def all(self) -> tuple[str, ...]:
+        return self.data + (self.model,)
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ShapePlan:
+    """Padded/global dimensions for one (config, model-axis size)."""
+
+    msize: int  # model axis size
+    d: int
+    H: int  # padded q heads
+    KV: int  # kv heads (padded iff sharded)
+    kv_sharded: bool
+    hd: int
+    Dff: int
+    V: int  # padded vocab
+    E: int  # routed experts (must divide msize if >0)
+    Dff_e: int  # expert hidden
+    Dff_shared: int  # shared-expert hidden total
+    d_inner: int  # ssm inner (padded)
+    rwkv_heads: int  # padded rwkv heads
+    rwkv_hd: int
+
+    @property
+    def H_l(self) -> int:
+        return self.H // self.msize
+
+    @property
+    def KV_l(self) -> int:
+        return self.KV // self.msize if self.kv_sharded else self.KV
+
+    @property
+    def Dff_l(self) -> int:
+        return self.Dff // self.msize
+
+    @property
+    def V_l(self) -> int:
+        return self.V // self.msize
+
+    @property
+    def E_l(self) -> int:
+        return self.E // self.msize if self.E else 0
+
+
+def make_plan(cfg: ModelConfig, msize: int) -> ShapePlan:
+    hd = cfg.resolved_head_dim
+    H = pad_to(cfg.n_heads, msize)
+    if cfg.n_kv_heads == cfg.n_heads:
+        # MHA: pad KV together with Q so the 1:1 mapping shards cleanly
+        KV = H
+        kv_sharded = True
+    else:
+        KV = cfg.n_kv_heads
+        # GQA KV can only shard if both H and KV divide the axis (alignment)
+        kv_sharded = KV % msize == 0 and cfg.n_heads % msize == 0
+    if cfg.family == "ssm":
+        assert cfg.d_model % (cfg.rwkv_head_dim * msize) == 0, (
+            cfg.name, cfg.d_model, cfg.rwkv_head_dim, msize)
+    Dff = pad_to(cfg.d_ff, msize)
+    V = pad_to(cfg.vocab, 128 * msize)
+    E = cfg.n_experts
+    if E:
+        assert E % msize == 0, f"{cfg.name}: {E} experts not divisible by model={msize}"
+    dff_e = cfg.d_ff_expert or cfg.d_ff
+    d_inner = pad_to(int(cfg.ssm_expand * cfg.d_model), msize)
+    rwkv_heads = pad_to(cfg.d_model // cfg.rwkv_head_dim, msize)
+    return ShapePlan(
+        msize=msize,
+        d=cfg.d_model,
+        H=H,
+        KV=KV,
+        kv_sharded=kv_sharded,
+        hd=hd,
+        Dff=Dff,
+        V=V,
+        E=E,
+        Dff_e=dff_e,
+        Dff_shared=pad_to(cfg.n_shared_experts * dff_e, msize) if cfg.n_shared_experts else 0,
+        d_inner=d_inner,
+        rwkv_heads=rwkv_heads,
+        rwkv_hd=cfg.rwkv_head_dim,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P  # PartitionSpec over mesh axes (global view)
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: float = 1.0
+
+    def abstract(self, dtype) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, dtype)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_abstract(defs: Any, dtype) -> Any:
+    return jax.tree.map(lambda d: d.abstract(dtype), defs, is_leaf=is_def)
+
+
+def tree_specs(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=is_def)
+
+
+def materialize(defs: Any, key: jax.Array, dtype) -> Any:
+    """Initialize real arrays for a ParamDef tree (small models / tests)."""
+    flat, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for k, d in zip(keys, flat):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else max(1, d.shape[-1])
+            if d.init == "small":
+                std = 0.02
+            else:
+                std = d.scale / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, d.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def stack_defs(defs: Any, n: int) -> Any:
+    """Add a leading stacked-layer dimension (replicated) to every def."""
+
+    def _stack(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n, *d.shape), spec=P(None, *d.spec))
+
+    return jax.tree.map(_stack, defs, is_leaf=is_def)
+
+
+def local_view_specs(specs: Any, mesh) -> Any:
+    """in_specs for shard_map: identical PartitionSpecs (manual over all axes)."""
+    return specs

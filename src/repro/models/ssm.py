@@ -1,0 +1,110 @@
+"""Mamba-style selective SSM head used by the Hymba hybrid block
+[arXiv:2411.13676].
+
+Channel parallelism: d_inner is sharded over the model axis; the selective
+scan is channel-local; dt/B/C projections contract over the *sharded*
+d_inner, producing small per-token tensors that are ``psum``-combined.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import comms
+from repro.core.comms import psum
+from repro.models.sharding import AxisCtx, ParamDef, ShapePlan
+
+f32 = jnp.float32
+
+DT_RANK = 16
+
+
+def ssm_defs(cfg: ModelConfig, plan: ShapePlan) -> dict[str, Any]:
+    d, di, st = plan.d, plan.d_inner, cfg.ssm_state
+    kc = cfg.ssm_conv
+    return {
+        "in_x": ParamDef((d, di), P(None, "model")),
+        "in_z": ParamDef((d, di), P(None, "model")),
+        "conv": ParamDef((kc, di), P(None, "model"), init="small"),
+        "conv_b": ParamDef((di,), P("model"), init="zeros"),
+        # dt/B/C from the (sharded) post-conv stream -> psum of small tensors
+        "w_dbc": ParamDef((di, DT_RANK + 2 * st), P("model", None), init="small"),
+        "dt_proj": ParamDef((DT_RANK, di), P(None, "model"), init="small"),
+        "dt_bias": ParamDef((di,), P("model"), init="zeros"),
+        "A_log": ParamDef((di, st), P("model", None), init="zeros"),
+        "D": ParamDef((di,), P("model"), init="ones"),
+        "out": ParamDef((di, d), P("model", None)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array):
+    """Depthwise causal conv. x (B,S,di_l); w (kc,di_l); state (B,kc-1,di_l)."""
+    kc = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(kc))
+    new_state = xp[:, x.shape[1] :] if kc > 1 else state
+    return out + b, new_state
+
+
+def selective_scan(
+    u: jax.Array,  # (B,S,di_l) post-conv activations
+    dt: jax.Array,  # (B,S,di_l)
+    A: jax.Array,  # (di_l, st)
+    Bm: jax.Array,  # (B,S,st)
+    Cm: jax.Array,  # (B,S,st)
+    h0: jax.Array,  # (B,di_l,st)
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = exp(dt A) h_{t-1} + dt B_t u_t ;  y_t = C_t · h_t."""
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)  # (B,di,st)
+        h = dA * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    seq = tuple(jnp.moveaxis(t.astype(f32), 1, 0) for t in (u, dt, Bm, Cm))
+    h, ys = jax.lax.scan(step, h0.astype(f32), seq)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def ssm_block(
+    cfg: ModelConfig,
+    p: dict[str, Any],
+    x: jax.Array,  # (B,S,d)
+    ax: AxisCtx,
+    state: dict[str, jax.Array] | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Returns (out (B,S,d) pre-psum partial? -> psummed), new state.
+
+    state: {"conv": (B,kc-1,di_l), "h": (B,di_l,st)}.
+    """
+    B, S, d = x.shape
+    di_l = p["in_x"].shape[1]
+    st = cfg.ssm_state
+    kc = cfg.ssm_conv
+    if state is None:
+        state = {
+            "conv": jnp.zeros((B, kc - 1, di_l), x.dtype),
+            "h": comms.varying(jnp.zeros((B, di_l, st), f32), ax.all),
+        }
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs, conv_state = _causal_conv(xs, p["conv"], p["conv_b"], state["conv"])
+    xs = jax.nn.silu(xs)
+    dbc = jnp.einsum("bse,ek->bsk", xs, p["w_dbc"])
+    dbc = psum(dbc, ax.model)  # small (B,S,dt_rank+2*st)
+    dt_r, Bm, Cm = jnp.split(dbc, [DT_RANK, DT_RANK + st], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsk,ke->bse", dt_r, p["dt_proj"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(f32))
+    y, h = selective_scan(xs, dt, A, Bm, Cm, state["h"])
+    y = y.astype(x.dtype) + xs * p["D"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    out = psum(out, ax.model)
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adamw, momentum_sgd, sgd  # noqa: F401
+from repro.optim.schedules import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,20 @@
+"""LR schedules, including the warm-up used with DGC (paper §IX-D)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        wu = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * wu * cos
+
+    return fn

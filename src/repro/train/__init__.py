@@ -1,0 +1,2 @@
+from repro.train.steps import ServeBundle, StepBundle, build_bundle, build_serve  # noqa: F401
+from repro.train.trainer import Trainer  # noqa: F401

@@ -1,0 +1,429 @@
+"""Step builders: the glue between model, communication pipeline, optimizer
+and the mesh.
+
+Everything (forward, backward, tensor-parallel collectives, gradient
+compression + aggregation, optimizer, Local-SGD parameter averaging, gossip
+mixing, decode) runs inside ONE ``jax.shard_map`` that is manual over every
+mesh axis — every byte on the wire is a collective this package placed
+explicitly (see repro.core.comms).
+
+Step functions produced (all jitted, AOT-lowerable):
+  * ``train_step(state, batch, lr)``   — fwd+bwd+aggregate+update (BSP path)
+  * ``inner_step``                     — same without gradient aggregation
+                                          (Local SGD inner iterations)
+  * ``sync_step(state)``               — Local-SGD model averaging (Eq. 9)
+  * ``gossip_step(state, batch, lr)``  — D-PSGD / CHOCO-SGD parameter mixing
+  * ``prefill_step(params, batch)``    — build decode caches
+  * ``serve_step(params, cache, tok)`` — one token, context-parallel cache
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import aggregate, comms, gossip, sync
+from repro.core.compression.base import get_compressor
+from repro.core.types import CommConfig
+from repro.launch import specs as SP
+from repro.models import transformer as T
+from repro.models.sharding import AxisCtx, make_plan, tree_specs
+from repro.optim.optimizers import Optimizer, global_clip
+
+f32 = jnp.float32
+
+
+def local_abstract(tree: Any, pspecs: Any, mesh) -> Any:
+    """Global abstract tree -> per-shard abstract tree under the mesh."""
+
+    def f(x, s):
+        shape = list(x.shape)
+        for i, entry in enumerate(s):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for nm in names:
+                assert shape[i] % mesh.shape[nm] == 0, (x.shape, s, nm)
+                shape[i] //= mesh.shape[nm]
+        return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
+
+    return jax.tree.map(f, tree, pspecs, is_leaf=lambda l: isinstance(l, P))
+
+
+def global_abstract(tree: Any, pspecs: Any, mesh) -> Any:
+    def f(x, s):
+        shape = list(x.shape)
+        for i, entry in enumerate(s):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for nm in names:
+                shape[i] *= mesh.shape[nm]
+        return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
+
+    return jax.tree.map(f, tree, pspecs, is_leaf=lambda l: isinstance(l, P))
+
+
+def _mentions_model(spec: P) -> bool:
+    for entry in spec:
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if "model" in names:
+            return True
+    return False
+
+
+def _fix_model_grads(grads: Any, specs: Any, model_axis: str) -> Any:
+    """Gradient correction for ``check_vma=False`` AD semantics.
+
+    Under the unreduced-cotangent convention (transpose(psum) = psum), raw
+    shard_map gradients come out as
+        * model-SHARDED params:   msize x the true local gradient slice,
+        * model-REPLICATED params: msize x a per-shard *partial* gradient.
+    So: sharded -> g/msize ; replicated -> psum(g)/msize.  Validated
+    element-wise against single-device AD for all 10 architectures
+    (tests/test_tp_equivalence.py).  The replicated-leaf psums are real wire
+    traffic (tagged 'tp_grad_fixup' in the roofline accounting)."""
+
+    msize = jax.lax.axis_size(model_axis)
+
+    def fix(g, s):
+        if _mentions_model(s):
+            return g / msize
+        with comms.tag("tp_grad_fixup"):
+            return comms.psum(g, model_axis) / msize
+
+    return jax.tree.map(fix, grads, specs, is_leaf=lambda l: isinstance(l, P))
+
+
+@dataclass
+class StepBundle:
+    cfg: ModelConfig
+    comm: CommConfig
+    mesh: Any
+    ax: AxisCtx
+    param_abstract: Any  # global
+    param_specs: Any
+    state_specs: Any
+    state_abstract: Any  # global
+    bucket_plan: aggregate.BucketPlan
+    opt: Optimizer
+    init_state: Callable  # (params) -> state          [jitted shard_map]
+    train_step: Callable  # (state, batch, lr) -> (state, metrics)
+    inner_step: Callable | None
+    sync_step: Callable | None
+    gossip_step: Callable | None
+    eval_step: Callable  # (state, batch) -> loss
+    batch_specs: Any = None
+    batch_pspecs: Any = None
+
+    def shardings(self, tree_pspecs):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), tree_pspecs,
+                            is_leaf=lambda l: isinstance(l, P))
+
+
+def build_bundle(
+    cfg: ModelConfig,
+    mesh,
+    comm: CommConfig,
+    opt: Optimizer,
+    shape: InputShape,
+    *,
+    clip_norm: float = 0.0,
+    seed: int = 0,
+    microbatch: int = 1,
+) -> StepBundle:
+    ax = SP.make_axis_ctx(mesh)
+    msize = mesh.shape["model"]
+    param_abs, param_specs, plan = T.abstract_params(cfg, msize)
+    batch_abs, batch_pspecs = SP.train_inputs(cfg, shape, mesh)
+
+    # pod-local mode: per-step gradient aggregation stays inside the pod
+    # (fast ICI); the pod axis is synchronized by sync_step (slow DCN)
+    agg_axes = ax.data
+    sync_axes = ax.data
+    if comm.pod_local and "pod" in mesh.axis_names:
+        agg_axes = tuple(a for a in ax.data if a != "pod")
+        sync_axes = ("pod",)
+
+    # bucket plan from *local* grad shapes
+    grads_local_abs = local_abstract(param_abs, param_specs, mesh)
+    bplan = aggregate.make_bucket_plan(comm, grads_local_abs)
+
+    # ---- state specs ---------------------------------------------------------
+    all_axes = ax.data + (ax.model,)
+    if opt.name.startswith("zero1"):
+        # optimizer state lives as per-shard slices over ALL axes
+        leafspec = jax.tree.map(lambda _: P(all_axes), param_specs,
+                                is_leaf=lambda l: isinstance(l, P))
+        base = opt.name.split("_", 1)[1]
+        inner = {
+            "sgd": (),
+            "adamw": {"m": leafspec, "v": leafspec, "t": P()},
+        }.get(base, {"v": leafspec})
+        opt_state_specs: Any = {"inner": inner}
+    else:
+        opt_state_specs = {
+            "sgd": (),
+            "momentum0.9": {"v": param_specs},
+            "adamw": {"m": param_specs, "v": param_specs, "t": P()},
+        }.get(opt.name, None)
+        if opt_state_specs is None:  # momentum with other coefficient
+            opt_state_specs = {"v": param_specs}
+    comm_state_specs: dict[str, Any] = {"step": P()}
+    if aggregate.plan_uses_powersgd(bplan):
+        comm_state_specs["psgd_q"] = [P(all_axes) for _ in bplan.buckets]
+    if comm.error_feedback:
+        comm_state_specs["ef"] = [P(all_axes) for _ in bplan.buckets]
+    if comm.momentum_correction:
+        comm_state_specs["u"] = [P(all_axes) for _ in bplan.buckets]
+    if comm.aggregator == "gossip" and comm.gossip_compress == "choco":
+        comm_state_specs["choco_xhat"] = jax.tree.map(lambda _: P(all_axes), list(bplan.buckets))
+        comm_state_specs["choco_nbr"] = jax.tree.map(lambda _: P(all_axes), list(bplan.buckets))
+    state_specs = {
+        "params": param_specs,
+        "opt": opt_state_specs,
+        "comm": comm_state_specs,
+        "step": P(),
+    }
+
+    n_shards_total = int(np.prod([mesh.shape[a] for a in all_axes]))
+
+    # ---- init ----------------------------------------------------------------
+    def _init(params):
+        opt_state = jax.tree.map(
+            lambda x: comms.varying(x, all_axes) if hasattr(x, "shape") and x.ndim else x,
+            opt.init(params),
+        )
+        cstate: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        if aggregate.plan_uses_powersgd(bplan):
+            base = aggregate.init_comm_state(comm, bplan)["psgd_q"]
+            cstate["psgd_q"] = [comms.varying(q, all_axes) for q in base]
+        if comm.error_feedback:
+            cstate["ef"] = [comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets]
+        if comm.momentum_correction:
+            cstate["u"] = [comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets]
+        if comm.aggregator == "gossip" and comm.gossip_compress == "choco":
+            cstate["choco_xhat"] = [comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets]
+            cstate["choco_nbr"] = [comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets]
+        return {"params": params, "opt": opt_state, "comm": cstate,
+                "step": jnp.zeros((), jnp.int32)}
+
+    init_state = jax.jit(
+        jax.shard_map(_init, mesh=mesh, in_specs=(param_specs,), out_specs=state_specs,
+                      check_vma=False)
+    )
+
+    # ---- train steps -----------------------------------------------------------
+    def make_step(do_aggregate: bool):
+        def _grads(params, batch):
+            def loss_fn(p):
+                loss, metrics = T.forward_loss(cfg, p, batch, ax)
+                return loss, metrics
+
+            return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        def _step(state, batch, lr):
+            params = state["params"]
+            if microbatch > 1:
+                # gradient accumulation: fwd+bwd one microbatch at a time —
+                # activation memory scales with B_local/microbatch
+                mb = jax.tree.map(
+                    lambda x: x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:]),
+                    batch,
+                )
+
+                def body(acc, b):
+                    (l, m), g = _grads(params, b)
+                    acc = jax.tree.map(lambda a, gg: a + gg.astype(f32), acc, g)
+                    return acc, (l, m)
+
+                acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+                with comms.loop(microbatch):  # collective accounting
+                    acc, (ls, ms) = jax.lax.scan(body, acc0, mb)
+                grads = jax.tree.map(lambda a, p: (a / microbatch).astype(p.dtype), acc, params)
+                loss = jnp.mean(ls)
+                metrics = jax.tree.map(jnp.mean, ms)
+            else:
+                (loss, metrics), grads = _grads(params, batch)
+            grads = _fix_model_grads(grads, param_specs, ax.model)
+            cstate = state["comm"]
+            if do_aggregate:
+                key = jax.random.fold_in(jax.random.key(seed), state["step"])
+                grads, cstate = aggregate.aggregate_gradients(
+                    comm, bplan, grads, cstate, key, agg_axes
+                )
+            if clip_norm:
+                grads = global_clip(grads, clip_norm)
+            new_params, opt_state = opt.update(grads, state["opt"], params, lr)
+            loss = comms.pmean(loss, ax.data)
+            out = {
+                "loss": loss,
+                "ce": comms.pmean(metrics["ce"], ax.data),
+                "aux": comms.pmean(metrics["aux"], ax.data),
+            }
+            return (
+                {"params": new_params, "opt": opt_state, "comm": cstate,
+                 "step": state["step"] + 1},
+                out,
+            )
+
+        return jax.jit(
+            jax.shard_map(
+                _step, mesh=mesh,
+                in_specs=(state_specs, batch_pspecs, P()),
+                out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
+                check_vma=False,
+            ),
+            donate_argnums=(0,),
+        )
+
+    train_step = make_step(do_aggregate=True)
+    inner_step = make_step(do_aggregate=False) if comm.sync in ("local", "post_local") else None
+
+    # ---- local SGD sync ----------------------------------------------------------
+    def _sync(state):
+        params = sync.average_params(state["params"], sync_axes, impl=comm.collective)
+        return {**state, "params": params}
+
+    sync_step = (
+        jax.jit(jax.shard_map(_sync, mesh=mesh, in_specs=(state_specs,),
+                              out_specs=state_specs, check_vma=False),
+                donate_argnums=(0,))
+        if comm.sync in ("local", "post_local") or comm.pod_local
+        else None
+    )
+
+    # ---- gossip step ----------------------------------------------------------
+    gossip_step = None
+    if comm.aggregator == "gossip":
+        compressor = get_compressor(comm.compressor, **comm.compressor_kwargs)
+
+        def _gstep(state, batch, lr):
+            params = state["params"]
+
+            def loss_fn(p):
+                loss, m = T.forward_loss(cfg, p, batch, ax)
+                return loss, m
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            grads = _fix_model_grads(grads, param_specs, ax.model)
+            # grads are per-worker over the data axes (decentralized);
+            # local SGD update then neighbor mixing (D-PSGD [51] / CHOCO [164])
+            new_params, opt_state = opt.update(grads, state["opt"], params, lr)
+            leaves, treedef = jax.tree.flatten(new_params)
+            bufs = aggregate._gather_buckets(bplan, leaves)
+            cstate = dict(state["comm"])
+            with comms.tag("gossip_mix"):
+                if comm.gossip_compress == "choco" and compressor is not None:
+                    st = gossip.ChocoState(list(cstate["choco_xhat"]), list(cstate["choco_nbr"]))
+                    key = jax.random.fold_in(jax.random.key(seed), state["step"])
+                    bufs, st = gossip.choco_mix(comm, compressor, key, bufs, st, ax.data)
+                    cstate["choco_xhat"], cstate["choco_nbr"] = st.x_hat, st.x_hat_nbr
+                else:
+                    bufs = gossip.dpsgd_mix(bufs, ax.data)
+            new_leaves = aggregate._scatter_buckets(bplan, bufs, leaves)
+            new_params = jax.tree.unflatten(treedef, new_leaves)
+            cstate["step"] = cstate["step"] + 1
+            out = {"loss": comms.pmean(loss, ax.data),
+                   "ce": comms.pmean(metrics["ce"], ax.data),
+                   "aux": comms.pmean(metrics["aux"], ax.data)}
+            return ({"params": new_params, "opt": opt_state, "comm": cstate,
+                     "step": state["step"] + 1}, out)
+
+        gossip_step = jax.jit(
+            jax.shard_map(_gstep, mesh=mesh,
+                          in_specs=(state_specs, batch_pspecs, P()),
+                          out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
+                          check_vma=False),
+            donate_argnums=(0,),
+        )
+
+    # ---- eval -----------------------------------------------------------------
+    def _eval(state, batch):
+        loss, _ = T.forward_loss(cfg, state["params"], batch, ax)
+        return comms.pmean(loss, ax.data)
+
+    eval_step = jax.jit(
+        jax.shard_map(_eval, mesh=mesh, in_specs=(state_specs, batch_pspecs),
+                      out_specs=P(), check_vma=False)
+    )
+
+    state_abstract = jax.eval_shape(init_state, param_abs)
+
+    return StepBundle(
+        cfg=cfg, comm=comm, mesh=mesh, ax=ax,
+        param_abstract=param_abs, param_specs=param_specs,
+        state_specs=state_specs, state_abstract=state_abstract,
+        bucket_plan=bplan, opt=opt,
+        init_state=init_state, train_step=train_step, inner_step=inner_step,
+        sync_step=sync_step, gossip_step=gossip_step, eval_step=eval_step,
+        batch_specs=batch_abs, batch_pspecs=batch_pspecs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving steps.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServeBundle:
+    cfg: ModelConfig
+    mesh: Any
+    ax: AxisCtx
+    param_abstract: Any
+    param_specs: Any
+    cache_abstract: Any
+    cache_pspecs: Any
+    batch_specs: Any
+    batch_pspecs: Any
+    token_pspec: Any
+    prefill_step: Callable
+    serve_step: Callable
+
+
+def build_serve(cfg: ModelConfig, mesh, shape: InputShape) -> ServeBundle:
+    ax = SP.make_axis_ctx(mesh)
+    msize = mesh.shape["model"]
+    param_abs, param_specs, _ = T.abstract_params(cfg, msize)
+    batch_abs, batch_pspecs = SP.train_inputs(cfg, shape, mesh)
+    cache_abs, cache_pspecs = SP.serve_cache_specs(cfg, mesh, shape)
+    baxes, saxes = SP.batch_sharding_plan(mesh, shape)
+    tok_pspec = P(baxes, None)
+
+    def _prefill(params, batch):
+        last, cache = T.prefill(cfg, params, batch, ax)
+        return last, cache
+
+    prefill_step = jax.jit(
+        jax.shard_map(_prefill, mesh=mesh, in_specs=(param_specs, batch_pspecs),
+                      out_specs=(P(baxes), cache_pspecs), check_vma=False)
+    )
+
+    def _serve(params, cache, tok):
+        return T.decode_step(
+            cfg, params, cache, tok, ax, seq_axes=saxes, max_seq=shape.seq_len
+        )
+
+    serve_step = jax.jit(
+        jax.shard_map(_serve, mesh=mesh,
+                      in_specs=(param_specs, cache_pspecs, tok_pspec),
+                      out_specs=(tok_pspec, cache_pspecs), check_vma=False),
+        donate_argnums=(1,),
+    )
+    return ServeBundle(
+        cfg=cfg, mesh=mesh, ax=ax, param_abstract=param_abs, param_specs=param_specs,
+        cache_abstract=cache_abs, cache_pspecs=cache_pspecs,
+        batch_specs=batch_abs, batch_pspecs=batch_pspecs, token_pspec=tok_pspec,
+        prefill_step=prefill_step, serve_step=serve_step,
+    )

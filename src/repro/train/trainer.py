@@ -1,0 +1,70 @@
+"""Training loop: drives the step bundle per the CommConfig's sync scheme,
+feeds the data pipeline, logs metrics, checkpoints."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.core import sync as sync_rules
+from repro.train.steps import StepBundle
+
+
+@dataclass
+class Trainer:
+    bundle: StepBundle
+    data: Any  # .batch(step) -> dict of np arrays (global)
+    lr_fn: Callable[[int], Any]
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0
+    log_every: int = 10
+    history: list[dict] = field(default_factory=list)
+
+    def _put(self, batch: dict[str, np.ndarray]):
+        b = self.bundle
+        return {
+            k: jax.device_put(v, NamedSharding(b.mesh, b.batch_pspecs[k]))
+            for k, v in batch.items()
+        }
+
+    def init(self, seed: int = 0):
+        b = self.bundle
+        from repro.models.transformer import init_params
+
+        # init on host then shard (small/test models; big models are dry-run only)
+        params = init_params(b.cfg, jax.random.key(seed), b.mesh.shape["model"])
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(b.mesh, s)),
+            params, b.param_specs, is_leaf=lambda l: hasattr(l, "shape"),
+        )
+        return b.init_state(params)
+
+    def fit(self, state, steps: int, start_step: int = 0):
+        b = self.bundle
+        comm = b.comm
+        t0 = time.perf_counter()
+        for t in range(start_step, start_step + steps):
+            batch = self._put(self.data.batch(t))
+            lr = self.lr_fn(t)
+            if comm.aggregator == "gossip":
+                state, m = b.gossip_step(state, batch, lr)
+            elif sync_rules.grads_need_aggregation(comm, t):
+                state, m = b.train_step(state, batch, lr)
+            else:
+                state, m = b.inner_step(state, batch, lr)
+            if comm.aggregator != "gossip" and sync_rules.params_need_sync(comm, t):
+                state = b.sync_step(state)
+            if self.log_every and (t % self.log_every == 0 or t == start_step + steps - 1):
+                row = {k: float(v) for k, v in m.items()}
+                row.update(step=t, wall=time.perf_counter() - t0)
+                self.history.append(row)
+            if self.ckpt_dir and self.ckpt_every and (t + 1) % self.ckpt_every == 0:
+                from repro.checkpoint import save
+
+                save(f"{self.ckpt_dir}/step{t+1}", state, step=t + 1)
+        return state

@@ -1,0 +1,10 @@
+from repro.utils.tree import (  # noqa: F401
+    flatten_with_paths,
+    global_norm,
+    tree_add,
+    tree_bytes,
+    tree_count,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)

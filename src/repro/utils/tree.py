@@ -1,0 +1,72 @@
+"""Small pytree utilities used across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (uses leaf dtypes)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def flatten_with_paths(tree: Any) -> dict[str, Any]:
+    """Flatten a pytree into ``{"a/b/0": leaf}`` path-keyed dict."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_name, leaf)`` over a pytree, keeping structure."""
+
+    def _fn(path, leaf):
+        key = "/".join(_path_str(p) for p in path)
+        return fn(key, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

@@ -1,0 +1,159 @@
+"""Property tests for the compression library (paper §V/§VI invariants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import get_compressor
+from repro.core.compression.base import list_compressors
+
+f32 = jnp.float32
+
+UNBIASED = ["qsgd", "terngrad", "natural", "natural_dithering", "randomk", "wangni"]
+SPARSE = ["topk", "gtopk", "randomk", "sbc", "stc"]
+
+
+def _vec(seed, n=512, scale=1.0):
+    return jax.random.normal(jax.random.key(seed), (n,)) * scale
+
+
+@pytest.mark.parametrize("name", UNBIASED)
+def test_unbiasedness(name):
+    """E[C(x)] == x for the unbiased compressors (CLT bound over R reps)."""
+    comp = get_compressor(name, **({"ratio": 0.25} if name in ("randomk", "wangni") else {}))
+    assert comp.unbiased
+    x = _vec(0, n=256)
+    R = 600
+    keys = jax.random.split(jax.random.key(1), R)
+
+    def one(k):
+        return comp.decompress(comp.compress(k, x))
+
+    est = jnp.mean(jax.vmap(one)(keys), axis=0)
+    err = jnp.linalg.norm(est - x) / jnp.linalg.norm(x)
+    # per-coordinate variance is bounded by ~|x| scale; 600 reps -> few %
+    assert float(err) < 0.25, (name, float(err))
+
+
+@given(st.integers(16, 4096), st.floats(0.01, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_topk_k_contraction(n, ratio):
+    """Top-k satisfies the k-contraction property (paper §VIII eq. 25):
+    ||x - C(x)||^2 <= (1 - k/n) ||x||^2."""
+    comp = get_compressor("topk", ratio=ratio)
+    x = _vec(n, n=n)
+    c = comp.compress(jax.random.key(0), x)
+    xh = comp.decompress(c)
+    k = max(1, int(n * ratio))
+    lhs = float(jnp.sum(jnp.square(x - xh)))
+    rhs = (1 - k / n) * float(jnp.sum(jnp.square(x)))
+    assert lhs <= rhs + 1e-5
+
+
+@given(st.integers(8, 2048))
+@settings(max_examples=20, deadline=None)
+def test_topk_is_best_k_term(n):
+    """Top-k error is no worse than random-k error (optimality among
+    k-sparsifications)."""
+    x = _vec(n, n=n)
+    topk = get_compressor("topk", ratio=0.1)
+    rk = get_compressor("randomk", ratio=0.1, scale=False)
+    et = jnp.sum(jnp.square(x - topk.decompress(topk.compress(jax.random.key(1), x))))
+    er = jnp.sum(jnp.square(x - rk.decompress(rk.compress(jax.random.key(2), x))))
+    assert float(et) <= float(er) + 1e-6
+
+
+@pytest.mark.parametrize("name", SPARSE)
+def test_sparsity_level(name):
+    comp = get_compressor(name, ratio=0.05)
+    x = _vec(3, n=1000)
+    xh = comp.decompress(comp.compress(jax.random.key(0), x))
+    nnz = int(jnp.sum(jnp.abs(xh) > 0))
+    assert nnz <= int(np.ceil(1000 * 0.05)) + 1, (name, nnz)
+
+
+def test_signsgd_payload():
+    comp = get_compressor("signsgd")
+    x = _vec(4)
+    c = comp.compress(jax.random.key(0), x)
+    assert c.payload["sign"].dtype == jnp.int8
+    xh = comp.decompress(c)
+    assert set(np.unique(np.asarray(xh))) <= {-1.0, 1.0}
+
+
+def test_onebit_reconstruction_means():
+    comp = get_compressor("onebit")
+    x = _vec(5)
+    xh = comp.decompress(comp.compress(jax.random.key(0), x))
+    pos = np.asarray(x) >= 0
+    np.testing.assert_allclose(np.unique(np.asarray(xh)[pos]), np.mean(np.asarray(x)[pos]), rtol=1e-5)
+
+
+def test_qsgd_levels_bound_and_wire_bits():
+    for s in (2, 4, 16, 64):
+        comp = get_compressor("qsgd", levels=s)
+        x = _vec(6, n=4096)
+        c = comp.compress(jax.random.key(0), x)
+        assert int(jnp.max(jnp.abs(c.payload["code"]))) <= s
+        assert comp.wire_bits(4096) < 4096 * 32  # beats f32
+
+
+def test_wire_bits_compression_claims():
+    """Survey claims: quantization <= 32x, sparsification can exceed 1000x."""
+    n = 1_000_000
+    assert get_compressor("signsgd").wire_bits(n) == n  # 32x
+    assert get_compressor("topk", ratio=0.0005).wire_bits(n) < n * 32 / 1000 + 64
+
+
+def test_kernel_backed_equals_jnp():
+    """Pallas-kernel compressors match the jnp compressors bit-for-bit when
+    fed the same key."""
+    x = _vec(7, n=5000, scale=0.1)
+    k = jax.random.key(3)
+    a = get_compressor("qsgd", levels=16).compress(k, x)
+    b = get_compressor("qsgd_kernel", levels=16).compress(k, x)
+    np.testing.assert_array_equal(np.asarray(a.payload["code"]), np.asarray(b.payload["code"]))
+    a = get_compressor("terngrad").compress(k, x)
+    b = get_compressor("terngrad_kernel").compress(k, x)
+    np.testing.assert_array_equal(np.asarray(a.payload["tern"]), np.asarray(b.payload["tern"]))
+    sp = get_compressor("signsgd_packed")
+    xh = sp.decompress(sp.compress(k, x))
+    np.testing.assert_array_equal(np.asarray(xh), np.where(np.asarray(x) >= 0, 1.0, -1.0))
+
+
+def test_atomo_unbiased_smallcase():
+    comp = get_compressor("atomo_svd", rank_budget=3)
+    x = _vec(8, n=64)
+    R = 400
+    keys = jax.random.split(jax.random.key(9), R)
+    est = jnp.mean(jax.vmap(lambda k: comp.decompress(comp.compress(k, x)))(keys), axis=0)
+    err = jnp.linalg.norm(est - x) / jnp.linalg.norm(x)
+    assert float(err) < 0.3
+
+
+def test_powersgd_roundtrip_and_rank():
+    """PowerSGD local roundtrip captures a low-rank matrix exactly at
+    rank >= true rank, and the factor wire size matches (a+b)r."""
+    from repro.core.compression.powersgd import shape2d
+
+    a, b, r = 32, 32, 3
+    k = jax.random.key(0)
+    M = (jax.random.normal(k, (a, r)) @ jax.random.normal(jax.random.fold_in(k, 1), (r, b)))
+    x = M.reshape(-1)
+    comp = get_compressor("powersgd", rank=4)
+    xh = comp.decompress(comp.compress(jax.random.key(2), x))
+    err = float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x))
+    assert err < 0.05, err
+    aa, bb = shape2d(x.size)
+    assert comp.wire_bits(x.size) == (aa + bb) * 4 * 32
+
+
+def test_registry_complete():
+    known = set(list_compressors())
+    for name in ("qsgd", "terngrad", "onebit", "signsgd", "natural", "topk",
+                 "gtopk", "randomk", "wangni", "threshold", "adaptive_threshold",
+                 "sbc", "stc", "atomo_svd", "variance_sparse",
+                 "qsgd_kernel", "terngrad_kernel", "signsgd_packed"):
+        assert name in known, name

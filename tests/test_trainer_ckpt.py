@@ -1,0 +1,62 @@
+"""Trainer + checkpoint integration: save mid-run, restore (including onto a
+different mesh), continue — state must round-trip exactly."""
+
+import numpy as np
+import pytest
+
+from tests.helpers import run_subprocess_devices
+
+SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.types import CommConfig
+from repro.launch.mesh import make_test_mesh
+from repro.optim.optimizers import momentum_sgd
+from repro.optim.schedules import constant
+from repro.train.steps import build_bundle
+from repro.train.trainer import Trainer
+from repro.data.pipeline import BigramSource
+from repro.checkpoint import restore, save
+import tempfile, os
+
+cfg = get_config("qwen3-0.6b").reduced().with_updates(
+    vocab=64, n_layers=2, d_ff=128, d_model=128, head_dim=32)
+shape = InputShape("t", 32, 8, "train")
+comm = CommConfig(compressor="topk", compressor_kwargs={"ratio": 0.1}, error_feedback=True)
+src = BigramSource(cfg.vocab, seed=3)
+
+class Data:
+    def batch(self, step): return src.batch(step, shape.global_batch, shape.seq_len)
+
+def make(mesh):
+    b = build_bundle(cfg, mesh, comm, momentum_sgd(0.0), shape)
+    return b, Trainer(b, Data(), constant(0.1), log_every=1)
+
+mesh_a = make_test_mesh(data=4, model=2)
+b1, t1 = make(mesh_a)
+state = t1.fit(t1.init(0), 6)
+ck = tempfile.mkdtemp() + "/ck"
+save(ck, state, step=6)
+# continue without restore -> reference trajectory
+state_ref = t1.fit(state, 4, start_step=6)
+ref_loss = t1.history[-1]["loss"]
+
+# restore onto a DIFFERENT mesh layout and continue
+mesh_b = make_test_mesh(data=2, model=2, pod=2)
+b2, t2 = make(mesh_b)
+like = t2.init(0)
+state2, step = restore(ck, like, b2.shardings(b2.state_specs))
+assert step == 6
+state2 = t2.fit(state2, 4, start_step=6)
+new_loss = t2.history[-1]["loss"]
+print("losses", ref_loss, new_loss)
+assert abs(ref_loss - new_loss) < 5e-3 * max(1, abs(ref_loss)), (ref_loss, new_loss)
+print("CKPT-RESUME OK")
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_across_meshes():
+    out = run_subprocess_devices(SCRIPT, n_devices=8, timeout=1800)
+    assert "CKPT-RESUME OK" in out
