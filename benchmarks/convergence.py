@@ -1,51 +1,54 @@
 """Paper §VIII / Table IV convergence columns: empirical convergence vs
 communication bits for the taxonomy cells (BSP/SSP/ASP/Local x PS/gossip x
-none/quant/spars) on the strongly-convex testbed, plus O(1/T) rate fits."""
+none/quant/spars) on the strongly-convex testbed, plus O(1/T) rate fits —
+declared as scenarios and executed by the experiments engine."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import Row
-from repro.core.compression import get_compressor
-from repro.core.simulate import SimCfg, quadratic_problem, simulate_training
+from repro.experiments import Scenario, run_scenario, run_scenarios
+
+BASE = dict(n_workers=8, steps=400, lr=0.02, grad_noise=0.05, seed=0)
+
+CELLS = [
+    Scenario(sync="bsp", **BASE),
+    Scenario(sync="bsp", compressor="qsgd", compressor_kwargs={"levels": 16}, **BASE),
+    Scenario(sync="bsp", compressor="topk", compressor_kwargs={"ratio": 0.05},
+             error_feedback=True, **BASE),
+    Scenario(sync="ssp", staleness=4, arch="ps", **BASE),
+    Scenario(sync="asp", staleness=4, arch="ps", **BASE),
+    Scenario(sync="local", local_steps=8, **BASE),
+    Scenario(sync="local", local_steps=8, compressor="qsgd",
+             compressor_kwargs={"levels": 16}, **BASE),
+    Scenario(sync="bsp", arch="gossip", **BASE),
+]
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
-    problem = quadratic_problem(n_workers=8, noise=0.05, seed=0)
-    cells = [
-        ("bsp/none", SimCfg(sync="bsp")),
-        ("bsp/qsgd", SimCfg(sync="bsp", compressor=get_compressor("qsgd", levels=16))),
-        ("bsp/topk_ef", SimCfg(sync="bsp", compressor=get_compressor("topk", ratio=0.05), error_feedback=True)),
-        ("ssp/none", SimCfg(sync="ssp", staleness=4)),
-        ("asp/none", SimCfg(sync="asp", staleness=4)),
-        ("local_H8/none", SimCfg(sync="local", local_steps=8)),
-        ("local_H8/qsgd", SimCfg(sync="local", local_steps=8, compressor=get_compressor("qsgd", levels=16))),
-        ("gossip/none", SimCfg(sync="gossip")),
-    ]
     errs = {}
-    for tag, cfg in cells:
-        cfg.steps, cfg.lr, cfg.n_workers = 400, 0.02, 8
-        out = simulate_training(cfg, problem=problem)
-        errs[tag] = out["x_star_err"]
+    for res in run_scenarios(CELLS, "training"):
+        s, m = res.scenario, res.measured
+        errs[(s.sync, s.arch, s.compressor)] = m["x_star_err"]
         rows.append(Row(
-            f"convergence/{tag}", 0.0,
-            f"x_err={out['x_star_err']:.3f} loss={out['loss'][-1]:.2f} "
-            f"Gbits={out['bits'][-1]/1e9:.2f}",
+            f"convergence/{res.tag}", 0.0,
+            f"x_err={m['x_star_err']:.3f} loss={m['final_loss']:.2f} "
+            f"Gbits={m['gbits']:.2f} (pred {res.predicted['bits_per_element']:.1f}b/elem)",
         ))
     # §VIII relations: BSP best-or-equal accuracy; staleness degrades; local
     # SGD trades accuracy for ~8x less communication
-    assert errs["bsp/none"] <= errs["asp/none"] + 0.05
-    assert errs["bsp/none"] <= errs["local_H8/none"] + 0.05
+    assert errs[("bsp", "allreduce", None)] <= errs[("asp", "ps", None)] + 0.05
+    assert errs[("bsp", "allreduce", None)] <= errs[("local", "allreduce", None)] + 0.05
     rows.append(Row("convergence/claims_validated", 0.0, True))
 
     # O(1/T) rate fit for BSP on the strongly-convex problem (§VIII: O(1/T))
-    out = simulate_training(SimCfg(sync="bsp", steps=600, lr=0.02, n_workers=8), problem=problem)
-    # estimate decay-rate exponent p from loss(t) - floor ~ t^-p over mid-range
-    floor = out["loss"][-1]
+    res = run_scenario(Scenario(sync="bsp", **{**BASE, "steps": 600}), "training")
+    loss = res.series["loss"][0]
+    floor = loss[-1]
     t = np.arange(40, 300)
-    y = np.maximum(out["loss"][40:300] - floor, 1e-9)
+    y = np.maximum(loss[40:300] - floor, 1e-9)
     p = -np.polyfit(np.log(t), np.log(y), 1)[0]
     rows.append(Row("convergence/rate_exponent_bsp", 0.0, f"{p:.2f}"))
     return rows

@@ -1,48 +1,37 @@
 """Paper §VII: scheduling of communication and computing — iteration time
 under sequential / WFBP / MG-WFBP schedules for a ResNet-50-like and a
-transformer-like layer profile; bucket-size sweep (MG-WFBP's knob)."""
+transformer-like layer profile; bucket-size sweep (MG-WFBP's knob) —
+declared as scenarios on the engine's schedule substrate."""
 
 from __future__ import annotations
 
 from benchmarks.common import Row
-from repro.core.costmodel import Link
-from repro.core.schedule import LayerSpec, simulate_schedule
+from repro.experiments import Scenario, run_scenario
 
-
-def _resnet_like():
-    # 161 gradient tensors, mostly small (the MG-WFBP motivation)
-    layers = []
-    for i in range(160):
-        layers.append(LayerSpec(f"conv{i}", grad_bytes=25.5e6 * 4 / 160, backward_time=5e-3 / 160))
-    layers.append(LayerSpec("fc", grad_bytes=8e6, backward_time=5e-4))
-    return layers
-
-
-def _transformer_like():
-    return [LayerSpec(f"block{i}", grad_bytes=12 * 4096 * 4096 * 2 / 1, backward_time=3e-3)
-            for i in range(32)]
+LINK = dict(alpha=2e-4, beta=1 / 10e9)
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
-    link = Link(alpha=2e-4, beta=1 / 10e9)
-    for net, layers in (("resnet50", _resnet_like()), ("transformer32", _transformer_like())):
+    for profile in ("resnet50", "transformer32"):
         base = None
+        times = {}
         for mode, bucket in (("sequential", 0), ("wfbp", 0), ("mgwfbp", 8e6), ("mgwfbp", 64e6)):
-            r = simulate_schedule(layers, n_workers=64, link=link, alg="ring",
-                                  mode=mode, bucket_bytes=bucket)
+            s = Scenario(schedule=mode, bucket_bytes=bucket, layer_profile=profile,
+                         n_workers=64, **LINK)
+            res = run_scenario(s, "schedule")
+            m = res.measured
+            times[(mode, bucket)] = m["iter_time"]
             tag = mode if mode != "mgwfbp" else f"mgwfbp_{int(bucket/1e6)}MB"
             if base is None:
-                base = r["iter_time"]
+                base = m["iter_time"]
             rows.append(Row(
-                f"schedule/{net}/{tag}", 0.0,
-                f"iter={r['iter_time']*1e3:.2f}ms msgs={r['n_messages']} "
-                f"speedup={base/r['iter_time']:.2f}x",
+                f"schedule/{profile}/{tag}", 0.0,
+                f"iter={m['iter_time']*1e3:.2f}ms msgs={int(m['n_messages'])} "
+                f"speedup={base/m['iter_time']:.2f}x "
+                f"(pred no-overlap {res.predicted['no_overlap_time']*1e3:.2f}ms)",
             ))
-        seq = simulate_schedule(layers, n_workers=64, link=link, alg="ring", mode="sequential")
-        wfbp = simulate_schedule(layers, n_workers=64, link=link, alg="ring", mode="wfbp")
-        mg = simulate_schedule(layers, n_workers=64, link=link, alg="ring", mode="mgwfbp", bucket_bytes=8e6)
-        assert wfbp["iter_time"] <= seq["iter_time"] + 1e-9
-        assert mg["iter_time"] <= wfbp["iter_time"] + 1e-9
+        assert times[("wfbp", 0)] <= times[("sequential", 0)] + 1e-9
+        assert times[("mgwfbp", 8e6)] <= times[("wfbp", 0)] + 1e-9
     rows.append(Row("schedule/claims_validated", 0.0, True))
     return rows

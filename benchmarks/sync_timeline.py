@@ -1,38 +1,44 @@
 """Paper Fig. 4 + Table II: throughput / staleness / congestion of each
-(architecture x synchronization) combination under a straggler model
-(discrete-event simulation)."""
+(architecture x synchronization) combination under a straggler model —
+declared as a scenario grid and executed by the experiments engine."""
 
 from __future__ import annotations
 
 from benchmarks.common import Row
-from repro.core.simulate import TimelineCfg, simulate_timeline
+from repro.experiments import expand, grid, run_scenarios
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
+    raw = grid(
+        arch=["ps", "allreduce", "gossip"],
+        sync=["bsp", "ssp", "asp", "local"],
+        n_workers=16,
+        steps=150,
+        staleness=3,
+        straggler_slowdown=3.0,
+        msg_bytes=4 * 25e6,
+    )
+    valid = expand(raw, substrate="timeline")
+    for s in raw:
+        if s not in valid:  # Table II: All-Reduce has no async cell
+            rows.append(Row(f"tableII/{s.arch}/{s.sync}", 0.0, "n/a (collective)"))
+
     results = {}
-    for arch in ("ps", "allreduce", "gossip"):
-        for sync in ("bsp", "ssp", "asp", "local"):
-            if arch != "ps" and sync in ("ssp", "asp"):
-                # Table II: All-Reduce is not applicable to ASP (collective
-                # fashion); we only model async under PS/gossip
-                if arch == "allreduce":
-                    rows.append(Row(f"tableII/{arch}/{sync}", 0.0, "n/a (collective)"))
-                    continue
-            r = simulate_timeline(TimelineCfg(
-                arch=arch, sync=sync, n_workers=16, iters=150,
-                straggler_worker_slowdown=3.0, msg_bytes=4 * 25e6,
-            ))
-            results[(arch, sync)] = r
-            rows.append(Row(
-                f"tableII/{arch}/{sync}", 0.0,
-                f"thr={r.throughput:.2f}/s stale={r.mean_staleness:.1f} "
-                f"idle={r.idle_frac:.2f} comm={r.comm_frac:.2f}",
-            ))
+    for res in run_scenarios(valid, "timeline"):
+        s, m = res.scenario, res.measured
+        results[(s.arch, s.sync)] = m
+        rows.append(Row(
+            f"tableII/{s.arch}/{s.sync}", 0.0,
+            f"thr={m['throughput']:.2f}/s stale={m['mean_staleness']:.1f} "
+            f"idle={m['idle_frac']:.2f} comm={m['comm_frac']:.2f} "
+            f"GB/w={m['bytes_per_worker']/1e9:.1f} (pred {res.predicted['bytes_per_worker']/1e9:.1f})",
+        ))
+
     # Table II qualitative relations, quantified:
-    assert results[("ps", "asp")].throughput > results[("ps", "bsp")].throughput
-    assert results[("ps", "local")].comm_frac < results[("ps", "bsp")].comm_frac
-    assert results[("allreduce", "bsp")].throughput > results[("ps", "bsp")].throughput
-    assert results[("ps", "asp")].mean_staleness > results[("ps", "ssp")].mean_staleness
+    assert results[("ps", "asp")]["throughput"] > results[("ps", "bsp")]["throughput"]
+    assert results[("ps", "local")]["comm_frac"] < results[("ps", "bsp")]["comm_frac"]
+    assert results[("allreduce", "bsp")]["throughput"] > results[("ps", "bsp")]["throughput"]
+    assert results[("ps", "asp")]["mean_staleness"] > results[("ps", "ssp")]["mean_staleness"]
     rows.append(Row("tableII/claims_validated", 0.0, True))
     return rows

@@ -1,6 +1,7 @@
 """Compression-scheme bake-off (the survey's Table IV, end-to-end): train the
-same model under each compression family and compare loss vs cumulative
-gradient-upload bytes.
+same model under each compression family and compare loss vs per-step wire
+bytes — scenarios on the engine's trainer substrate (4-way data x 2-way
+model mesh).
 
     PYTHONPATH=src python examples/compression_comparison.py
 """
@@ -10,56 +11,29 @@ import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
 
-import jax
-
-from repro.configs import get_config
-from repro.configs.base import InputShape
-from repro.core import comms
-from repro.core.compression import get_compressor
-from repro.core.types import CommConfig
-from repro.data.pipeline import BigramSource
-from repro.launch.mesh import make_test_mesh
-from repro.optim.optimizers import momentum_sgd
-from repro.optim.schedules import constant
-from repro.train.steps import build_bundle
-from repro.train.trainer import Trainer
+from repro.experiments import Scenario
+from repro.experiments.trainer_substrate import run_trainer_scenario
 
 STEPS = 120
+BASE = dict(n_workers=4, steps=STEPS)
 
 CELLS = [
-    ("dense_bsp        (32 bit)", CommConfig(), 0.3),
-    ("qsgd s=16        (~5 bit)", CommConfig(compressor="qsgd", compressor_kwargs={"levels": 16}), 0.3),
-    ("terngrad         (~2 bit)", CommConfig(compressor="terngrad", compressor_kwargs={"clip_sigma": 2.5}), 0.1),
-    ("signsgd majority (1 bit) ", CommConfig(compressor="signsgd"), 0.02),
-    ("topk 5% + EF             ", CommConfig(compressor="topk", compressor_kwargs={"ratio": 0.05}, error_feedback=True), 0.1),
-    ("gtopk 5% + EF            ", CommConfig(compressor="gtopk", compressor_kwargs={"ratio": 0.05}, error_feedback=True), 0.1),
-    ("local SGD H=8            ", CommConfig(sync="local", local_steps=8), 0.1),
+    ("dense_bsp        (32 bit)", Scenario(lr=0.3, **BASE)),
+    ("qsgd s=16        (~5 bit)", Scenario(compressor="qsgd", compressor_kwargs={"levels": 16}, lr=0.3, **BASE)),
+    ("terngrad         (~2 bit)", Scenario(compressor="terngrad", compressor_kwargs={"clip_sigma": 2.5}, lr=0.1, **BASE)),
+    ("signsgd majority (1 bit) ", Scenario(compressor="signsgd", lr=0.02, **BASE)),
+    ("topk 5% + EF             ", Scenario(compressor="topk", compressor_kwargs={"ratio": 0.05}, error_feedback=True, lr=0.1, **BASE)),
+    ("gtopk 5% + EF            ", Scenario(compressor="gtopk", compressor_kwargs={"ratio": 0.05}, error_feedback=True, lr=0.1, **BASE)),
+    ("local SGD H=8            ", Scenario(sync="local", local_steps=8, lr=0.1, **BASE)),
 ]
 
 
 def main():
-    cfg = get_config("qwen3-0.6b").reduced().with_updates(
-        vocab=128, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
-    shape = InputShape("train", 64, 16, "train")
-    mesh = make_test_mesh(data=4, model=2)
-    src = BigramSource(cfg.vocab, seed=0)
-
-    class Data:
-        def batch(self, step):
-            return src.batch(step, shape.global_batch, shape.seq_len)
-
     print(f"{'scheme':28s} {'final loss':>10s} {'agg wire/step':>14s}")
-    for name, comm, lr in CELLS:
-        with comms.capture() as log:
-            bundle = build_bundle(cfg, mesh, comm, momentum_sgd(0.0), shape)
-            trainer = Trainer(bundle, Data(), constant(lr), log_every=STEPS - 1)
-            state = trainer.init()
-            state = trainer.fit(state, STEPS)
-        wire = log.by_tag().get("grad_agg", 0.0)
-        per_step = wire  # capture traces the step once
-        if comm.sync == "local":
-            per_step = log.by_tag().get("local_sgd_sync", 0.0) / comm.local_steps
-        print(f"{name:28s} {trainer.history[-1]['loss']:10.4f} {per_step/1e3:11.1f}KB")
+    for name, scenario in CELLS:
+        res = run_trainer_scenario(scenario, data_par=4, model_par=2)
+        print(f"{name:28s} {res.measured['final_loss']:10.4f} "
+              f"{res.measured['wire_kb_per_step']:11.1f}KB")
     print("COMPARISON OK")
 
 

@@ -1,5 +1,6 @@
 """Decentralized (gossip) training: D-PSGD [51] and CHOCO-SGD [164]
-(compressed gossip) vs centralized BSP — worker consensus and loss.
+(compressed gossip) vs centralized BSP — worker consensus and loss,
+declared as scenarios on the engine's trainer substrate (8-worker ring).
 
     PYTHONPATH=src python examples/gossip_decentralized.py
 """
@@ -9,41 +10,24 @@ import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
 
-import jax
+from repro.experiments import Scenario
+from repro.experiments.trainer_substrate import run_trainer_scenario
 
-from repro.configs import get_config
-from repro.configs.base import InputShape
-from repro.core.types import CommConfig
-from repro.data.pipeline import BigramSource
-from repro.launch.mesh import make_test_mesh
-from repro.optim.optimizers import momentum_sgd
-from repro.optim.schedules import constant
-from repro.train.steps import build_bundle
-from repro.train.trainer import Trainer
+BASE = dict(n_workers=8, steps=120, lr=0.2)
+
+RUNS = [
+    ("BSP (centralized)", Scenario(**BASE)),
+    ("D-PSGD ring gossip", Scenario(arch="gossip", **BASE)),
+    ("CHOCO-SGD topk-10%", Scenario(arch="gossip", gossip_compress="choco",
+                                    compressor="topk", compressor_kwargs={"ratio": 0.1},
+                                    **BASE)),
+]
 
 
 def main():
-    cfg = get_config("qwen3-0.6b").reduced().with_updates(
-        vocab=128, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
-    shape = InputShape("train", 64, 16, "train")
-    mesh = make_test_mesh(data=8, model=1)  # 8-worker gossip ring
-    src = BigramSource(cfg.vocab, seed=0)
-
-    class Data:
-        def batch(self, step):
-            return src.batch(step, shape.global_batch, shape.seq_len)
-
-    runs = [
-        ("BSP (centralized)", CommConfig()),
-        ("D-PSGD ring gossip", CommConfig(aggregator="gossip")),
-        ("CHOCO-SGD topk-10%", CommConfig(aggregator="gossip", gossip_compress="choco",
-                                          compressor="topk", compressor_kwargs={"ratio": 0.1})),
-    ]
-    for name, comm in runs:
-        bundle = build_bundle(cfg, mesh, comm, momentum_sgd(), shape)
-        trainer = Trainer(bundle, Data(), constant(0.2), log_every=30)
-        state = trainer.fit(trainer.init(), 120)
-        print(f"{name:22s} loss: " + " -> ".join(f"{r['loss']:.3f}" for r in trainer.history))
+    for name, scenario in RUNS:
+        res = run_trainer_scenario(scenario, momentum=0.9, log_every=30)
+        print(f"{name:22s} loss: " + " -> ".join(f"{l:.3f}" for l in res.series["loss"]))
     print("GOSSIP OK")
 
 

@@ -1,5 +1,6 @@
 """Local SGD [73] / post-local SGD [121] vs BSP: loss vs synchronization
-rounds — the communication-frequency dimension of the taxonomy (§III).
+rounds — the communication-frequency dimension of the taxonomy (§III),
+declared as scenarios on the engine's trainer substrate.
 
     PYTHONPATH=src python examples/local_sgd_vs_bsp.py
 """
@@ -9,48 +10,27 @@ import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
 
-import jax
-
-from repro.configs import get_config
-from repro.configs.base import InputShape
-from repro.core import comms
-from repro.core.types import CommConfig
-from repro.data.pipeline import BigramSource
-from repro.launch.mesh import make_test_mesh
-from repro.optim.optimizers import momentum_sgd
-from repro.optim.schedules import constant
-from repro.train.steps import build_bundle
-from repro.train.trainer import Trainer
+from repro.experiments import Scenario
+from repro.experiments.trainer_substrate import run_trainer_scenario
 
 STEPS = 160
+BASE = dict(n_workers=8, steps=STEPS, lr=0.15)
+
+RUNS = [
+    ("BSP (sync every step)", Scenario(sync="bsp", **BASE)),
+    ("Local SGD H=4", Scenario(sync="local", local_steps=4, **BASE)),
+    ("Local SGD H=16", Scenario(sync="local", local_steps=16, **BASE)),
+    ("post-local (BSP 80 -> H=8)", Scenario(sync="post_local", local_steps=8,
+                                            post_local_switch=80, **BASE)),
+]
 
 
 def main():
-    cfg = get_config("qwen3-0.6b").reduced().with_updates(
-        vocab=128, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
-    shape = InputShape("train", 64, 16, "train")
-    mesh = make_test_mesh(data=8, model=1)
-    src = BigramSource(cfg.vocab, seed=0)
-
-    class Data:
-        def batch(self, step):
-            return src.batch(step, shape.global_batch, shape.seq_len)
-
-    runs = [
-        ("BSP (sync every step)", CommConfig(), STEPS),
-        ("Local SGD H=4", CommConfig(sync="local", local_steps=4), STEPS // 4),
-        ("Local SGD H=16", CommConfig(sync="local", local_steps=16), STEPS // 16),
-        ("post-local (BSP 80 -> H=8)", CommConfig(sync="post_local", local_steps=8,
-                                                  post_local_switch=80), None),
-    ]
     print(f"{'scheme':28s} {'final loss':>10s} {'sync rounds':>12s}")
-    for name, comm, rounds in runs:
-        bundle = build_bundle(cfg, mesh, comm, momentum_sgd(0.0), shape)
-        trainer = Trainer(bundle, Data(), constant(0.15), log_every=STEPS - 1)
-        state = trainer.fit(trainer.init(), STEPS)
-        if rounds is None:
-            rounds = 80 + (STEPS - 80) // 8
-        print(f"{name:28s} {trainer.history[-1]['loss']:10.4f} {rounds:12d}")
+    for name, scenario in RUNS:
+        res = run_trainer_scenario(scenario)
+        print(f"{name:28s} {res.measured['final_loss']:10.4f} "
+              f"{int(res.measured['sync_rounds']):12d}")
     print("LOCAL-SGD OK")
 
 

@@ -1,0 +1,80 @@
+"""Version shims for jax APIs that moved between releases.
+
+The repo targets the modern surface (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``) but must
+also run on jax 0.4.x where:
+
+* ``jax.sharding.AxisType`` does not exist (no explicit-sharding mode);
+* ``jax.make_mesh`` takes no ``axis_types`` keyword;
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and the replication
+  check is spelled ``check_rep`` instead of ``check_vma``.
+
+Everything that builds meshes or shard_maps goes through this module
+(``repro.launch.mesh``, ``repro.train.steps``, the multi-device tests) so the
+version split lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+try:  # jax >= 0.5: explicit sharding types exist
+    from jax.sharding import AxisType  # noqa: F401
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: provide a stand-in so call sites still read
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``."""
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+if hasattr(jax, "shard_map"):  # modern jax
+    _shard_map = jax.shard_map
+    _CHECK_KW = (
+        "check_vma"
+        if "check_vma" in inspect.signature(jax.shard_map).parameters
+        else "check_rep"
+    )
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+    """``jax.shard_map`` with the modern keyword surface on any jax."""
+    kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+if hasattr(jax.lax, "pcast"):
+    def pcast_varying(x, axes):
+        return jax.lax.pcast(x, tuple(axes), to="varying")
+else:
+    def pcast_varying(x, axes):
+        # jax 0.4.x has no varying-manual-axes tracking; with the replication
+        # check disabled (check_rep=False) the annotation is a no-op anyway.
+        return x
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name) -> int:
+        # psum of a concrete unit value constant-folds to the (static) size.
+        return jax.lax.psum(1, axis_name)

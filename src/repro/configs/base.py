@@ -81,6 +81,12 @@ class ModelConfig:
     d_ff_expert: int = 0  # expert hidden size (d_ff used for dense layers)
     first_dense_layers: int = 0  # leading layers with dense FFN (deepseek)
     router_aux_coef: float = 0.001
+    #: expert-capacity factor: each expert buffers C = cf*T*k/E tokens and
+    #: DROPS the overflow. Dropping depends on how many tokens are in the
+    #: batch, so prefill+decode and a full forward pass legitimately diverge
+    #: once any expert overflows; equivalence tests raise this to disable
+    #: dropping (see tests/test_decode_equivalence.py).
+    moe_capacity_factor: float = 1.25
 
     # SSM / hybrid (rwkv6, hymba) ---------------------------------------------
     ssm_state: int = 16

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size as compat_axis_size
+
 from repro.core import collectives, comms, feedback
 from repro.core.compression.base import Compressed, get_compressor
 from repro.core.types import CommConfig
@@ -158,7 +160,7 @@ def _aggregate_one(
     """Returns (aggregated mean, self decompressed C(a) for the EF update)."""
     n_workers = 1
     for axn in axes:
-        n_workers *= jax.lax.axis_size(axn)
+        n_workers *= compat_axis_size(axn)
 
     if compressor is None:
         if comm.agg_dtype == "bfloat16":
@@ -213,12 +215,12 @@ def aggregate_gradients(
     bufs = _gather_buckets(plan, leaves)
     n_workers = 1
     for axn in axes:
-        n_workers *= jax.lax.axis_size(axn)
+        n_workers *= compat_axis_size(axn)
 
     # distinct stochastic-compression keys per worker
     widx = jnp.zeros((), jnp.int32)
     for axn in axes:
-        widx = widx * jax.lax.axis_size(axn) + jax.lax.axis_index(axn)
+        widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
     key = jax.random.fold_in(key, widx)
 
     state = dict(comm_state)

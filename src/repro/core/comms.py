@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size as compat_axis_size, pcast_varying as compat_pcast_varying
+
 _STATE = threading.local()
 
 
@@ -142,7 +144,7 @@ def _record(kind: str, axes, x) -> None:
     n = 1
     try:
         for a in axes:
-            n *= jax.lax.axis_size(a)
+            n *= compat_axis_size(a)
     except Exception:  # outside shard_map (e.g. unit tests): size unknown
         n = 1
     log.records.append(CollRecord(kind, tuple(axes), total, _mult(), n, _tag()))
@@ -201,7 +203,7 @@ def varying(x, axes):
     needed for scan carries initialized with jnp.zeros inside shard_map."""
     if isinstance(axes, str):
         axes = (axes,)
-    return jax.lax.pcast(x, tuple(axes), to="varying")
+    return compat_pcast_varying(x, axes)
 
 
 def axis_index(axis_name):
@@ -209,4 +211,4 @@ def axis_index(axis_name):
 
 
 def axis_size(axis_name) -> int:
-    return jax.lax.axis_size(axis_name)
+    return compat_axis_size(axis_name)

@@ -74,6 +74,20 @@ def gossip_cost(nbytes: float, peers: int = 2, link: Link = Link()) -> float:
     return peers * (link.alpha + link.beta * nbytes)
 
 
+def round_wire_bytes(arch: str, n: int, nbytes: float, *, peers: int = 2) -> float:
+    """Per-worker wire bytes of ONE synchronization round (both directions).
+    The single source for byte accounting — the timeline simulator and the
+    scenario engine's predictions both use it, so measured and predicted
+    bytes can only diverge through dynamics, never through the formula."""
+    if arch == "ps":
+        return 2 * nbytes  # upload + download
+    if arch == "allreduce":
+        return 2 * (n - 1) / n * nbytes  # ring: reduce-scatter + all-gather
+    if arch == "gossip":
+        return peers * nbytes
+    raise ValueError(arch)
+
+
 # --------------------------- Table IV -------------------------------------
 
 

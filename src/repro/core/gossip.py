@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size as compat_axis_size
+
 from repro.core import comms
 from repro.core.compression.base import Compressed
 from repro.core.types import CommConfig
@@ -60,7 +62,7 @@ def _neighbor_sum(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
     wraps across the pod axis boundary via the same ppermute on that axis."""
     total = x
     axis = axes[-1]  # ring within the innermost data axis
-    n = jax.lax.axis_size(axis)
+    n = compat_axis_size(axis)
     right = [(j, (j + 1) % n) for j in range(n)]
     left = [(j, (j - 1) % n) for j in range(n)]
     return comms.ppermute(x, axis, right) + comms.ppermute(x, axis, left)
@@ -119,7 +121,7 @@ def _neighbor_sum_payload(compressor, c: Compressed, axes: tuple[str, ...]) -> j
     """Sum of both neighbors' decompressed payloads, exchanging only the
     compressed wire format."""
     axis = axes[-1]
-    n = jax.lax.axis_size(axis)
+    n = compat_axis_size(axis)
     right = [(j, (j + 1) % n) for j in range(n)]
     left = [(j, (j - 1) % n) for j in range(n)]
     total = None

@@ -62,6 +62,7 @@ class TimelineResult:
     idle_frac: float
     mean_staleness: float
     comm_frac: float
+    bytes_per_worker: float = 0.0  # wire bytes each worker moved (up+down)
 
     def row(self) -> dict:
         return {
@@ -69,6 +70,7 @@ class TimelineResult:
             "idle_frac": self.idle_frac,
             "mean_staleness": self.mean_staleness,
             "comm_frac": self.comm_frac,
+            "bytes_per_worker": self.bytes_per_worker,
         }
 
 
@@ -88,6 +90,13 @@ def _comm_time(cfg: TimelineCfg, concurrent: int) -> float:
     raise ValueError(cfg.arch)
 
 
+def _comm_bytes(cfg: TimelineCfg) -> float:
+    """Per-worker wire bytes of one round (shared costmodel formula)."""
+    from repro.core.costmodel import round_wire_bytes
+
+    return round_wire_bytes(cfg.arch, cfg.n_workers, cfg.msg_bytes)
+
+
 def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
     rng = np.random.default_rng(cfg.seed)
     n, T = cfg.n_workers, cfg.iters
@@ -98,6 +107,8 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
     done = np.zeros(n, dtype=int)  # iterations completed
     comm_total = np.zeros(n)
     stale_samples = []
+    bytes_per_worker = 0.0
+    round_bytes = _comm_bytes(cfg)
 
     if cfg.sync == "bsp":
         for it in range(T):
@@ -106,6 +117,7 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
             c = _comm_time(cfg, concurrent=n)
             t = np.full(n, barrier + c)
             comm_total += (t - t_comp)
+            bytes_per_worker += round_bytes
             finish[:, it] = t
             stale_samples.append(0.0)
     elif cfg.sync == "local":
@@ -116,6 +128,7 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
                 barrier = t.max()
                 c = _comm_time(cfg, concurrent=n)
                 comm_total += barrier + c - t
+                bytes_per_worker += round_bytes
                 t = np.full(n, barrier + c)
                 finish[:, it] = t
             stale_samples.append(0.0)
@@ -136,6 +149,7 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
             start = t[i]
             t[i] += compute[i, done[i]] + c_one
             comm_total[i] += c_one
+            bytes_per_worker += round_bytes / n  # per-worker average
             finish[i, done[i]] = t[i]
             stale_samples.append(done[i] - done.min())
             done[i] += 1
@@ -149,6 +163,7 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
         idle_frac=float(1.0 - busy / (makespan * n)),
         mean_staleness=float(np.mean(stale_samples)),
         comm_frac=float(comm_total.sum() / (makespan * n)),
+        bytes_per_worker=float(bytes_per_worker),
     )
 
 
@@ -192,6 +207,42 @@ def quadratic_problem(dim: int = 64, n_workers: int = 8, noise: float = 0.1, see
     return grad, loss, jnp.zeros((dim,), f32), x_star
 
 
+def logistic_problem(dim: int = 32, n_workers: int = 8, n_samples: int = 64,
+                     noise: float = 0.05, seed: int = 0):
+    """Worker-heterogeneous l2-regularized logistic regression: each worker
+    holds its own sample shard (drawn around a shifted ground truth), the
+    convex-but-not-quadratic testbed of the survey's §VIII experiments."""
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(dim,))
+    feats = jnp.asarray(rng.normal(size=(n_workers, n_samples, dim)), f32)
+    shift = rng.normal(size=(n_workers, dim)) * 0.3
+    logits = np.einsum("nsd,nd->ns", np.asarray(feats), w_true[None] + shift)
+    labels = jnp.asarray((logits + rng.logistic(size=logits.shape) > 0).astype(np.float32))
+    lam = 1e-2
+
+    def _loss_one(x, i):
+        z = feats[i] @ x
+        return jnp.mean(jnp.logaddexp(0.0, z) - labels[i] * z) + 0.5 * lam * jnp.sum(x * x)
+
+    def grad(x, i, key):
+        g = jax.grad(_loss_one)(x, i)
+        return g + noise * jax.random.normal(key, x.shape)
+
+    def loss(x):
+        return jnp.mean(jnp.stack([_loss_one(x, i) for i in range(n_workers)]))
+
+    x0 = jnp.zeros((dim,), f32)
+    # x* has no closed form; report distance to the heterogeneity-free truth
+    x_star = jnp.asarray(w_true, f32)
+    return grad, loss, x0, x_star
+
+
+PROBLEMS = {
+    "quadratic": quadratic_problem,
+    "logistic": logistic_problem,
+}
+
+
 def simulate_training(cfg: SimCfg, problem=None) -> dict[str, np.ndarray]:
     """Exact simulation of n workers under the chosen sync/topology/compressor.
 
@@ -217,21 +268,27 @@ def simulate_training(cfg: SimCfg, problem=None) -> dict[str, np.ndarray]:
     losses, consensus, bits = [], [], []
     total_bits = 0.0
 
+    # Wire accounting: one upload per worker per COMMUNICATION round —
+    # 32 bits/element dense, comp.wire_bits compressed. Local SGD only
+    # communicates at sync steps (the parameter average), so its per-step
+    # cost is 0 and the round cost is charged there.
+    def _round_bits() -> float:
+        if comp is None:
+            return 32.0 * dim * n
+        wb = comp.wire_bits(dim)
+        return 0.0 if wb != wb else wb * n  # NaN (data-dependent) -> 0 here
+
     def compress_all(keys, G, ef):
         if comp is None:
-            return G, ef, 0.0
+            return G, ef, 0.0 if cfg.sync == "local" else _round_bits()
         a = G + ef if cfg.error_feedback else G
-        out, hats = [], []
+        out = []
         for i in range(n):
             c = comp.compress(keys[i], a[i])
-            hat = comp.decompress(c)
-            out.append(hat)
-            hats.append(hat)
+            out.append(comp.decompress(c))
         out = jnp.stack(out)
         new_ef = (a - out) if cfg.error_feedback else ef
-        wb = comp.wire_bits(dim)
-        wb = 0.0 if wb != wb else wb  # NaN (data-dependent) -> 0 here
-        return out, new_ef, wb * n
+        return out, new_ef, 0.0 if cfg.sync == "local" else _round_bits()
 
     for t in range(cfg.steps):
         key, k1, k2 = jax.random.split(key, 3)
@@ -257,7 +314,7 @@ def simulate_training(cfg: SimCfg, problem=None) -> dict[str, np.ndarray]:
                 X = X - cfg.lr * Ghat
                 if (t + 1) % cfg.local_steps == 0:
                     X = jnp.tile(jnp.mean(X, axis=0)[None], (n, 1))
-                    total_bits += 32.0 * dim * n
+                    total_bits += _round_bits()
             else:
                 gbar = jnp.mean(Ghat, axis=0)
                 X = X - cfg.lr * gbar[None, :]

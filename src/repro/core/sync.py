@@ -18,6 +18,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size as compat_axis_size
+
 from repro.core import collectives, comms
 from repro.core.types import CommConfig
 
@@ -53,7 +55,7 @@ def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla") -> Any
     """Model averaging for Local SGD (Eq. 9, sync branch)."""
     n = 1
     for axn in axes:
-        n *= jax.lax.axis_size(axn)
+        n *= compat_axis_size(axn)
     with comms.tag("local_sgd_sync"):
         return jax.tree.map(
             lambda p: (collectives.allreduce(p.astype(jnp.float32), axes, impl=impl) / n).astype(p.dtype),

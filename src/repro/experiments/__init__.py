@@ -1,0 +1,29 @@
+"""Declarative scenario-matrix engine over the survey's four-dimension
+taxonomy (synchronization x architecture x compression x scheduling).
+
+* :mod:`repro.experiments.scenario` — the frozen :class:`Scenario` point,
+  ``grid()`` / ``expand()`` cross-product helpers with validity filtering;
+* :mod:`repro.experiments.runner`  — batch execution on the simulation
+  substrates (``timeline`` / ``training`` / ``schedule``) with cost-model
+  predictions attached to every run;
+* :mod:`repro.experiments.tables`  — Table II/IV-style comparison tables;
+* ``python -m repro.experiments.run`` — the CLI sweep driver.
+
+Benchmarks (`benchmarks/*.py`) and the comparison examples declare their
+matrix slice as scenarios and run through this engine instead of hand-wiring
+each cell.
+"""
+
+from repro.experiments.scenario import (  # noqa: F401
+    Scenario,
+    expand,
+    grid,
+)
+from repro.experiments.runner import (  # noqa: F401
+    ScenarioResult,
+    estimated_wire_bytes,
+    rounds_per_iter,
+    run_scenario,
+    run_scenarios,
+)
+from repro.experiments.tables import format_table  # noqa: F401

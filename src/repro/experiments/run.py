@@ -1,0 +1,144 @@
+"""Scenario-matrix sweep CLI.
+
+    PYTHONPATH=src python -m repro.experiments.run \
+        --substrate timeline \
+        --grid "sync=bsp,local,asp arch=ps,allreduce,gossip compressor=none,qsgd:levels=16" \
+        --workers 16 --steps 120 --replicas 1
+
+``--grid`` is a space-separated list of ``field=v1,v2,...`` axes (any
+Scenario field). Compressor values may carry kwargs after colons:
+``topk:ratio=0.05``. Invalid taxonomy cells (e.g. all-reduce x ASP) are
+dropped and reported on stderr. The default grid sweeps the paper's
+sync x architecture x compression matrix (16 valid cells) and prints a
+Table II-style comparison of measured vs cost-model-predicted time/bytes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from repro.experiments.runner import run_scenarios
+from repro.experiments.scenario import Scenario, expand, grid
+from repro.experiments.tables import format_csv, format_table
+
+DEFAULT_GRID = "sync=bsp,local,asp arch=ps,allreduce,gossip compressor=none,qsgd:levels=16"
+
+_FIELD_TYPES = {f.name: f.type for f in dataclasses.fields(Scenario)}
+
+
+def _coerce(field: str, raw: str):
+    t = _FIELD_TYPES.get(field, "str")
+    if field == "compressor":
+        if raw in ("none", ""):
+            return None, ()
+        name, _, rest = raw.partition(":")
+        kwargs = []
+        for part in rest.split(":") if rest else []:
+            k, _, v = part.partition("=")
+            kwargs.append((k, _num(v)))
+        return name, tuple(kwargs)
+    if raw in ("true", "True"):
+        return True
+    if raw in ("false", "False"):
+        return False
+    if "int" in str(t):
+        return int(raw)
+    if "float" in str(t):
+        return float(raw)
+    return raw
+
+
+def _num(v: str):
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def parse_grid(spec: str, **base) -> list[Scenario]:
+    """``"sync=bsp,local arch=ps"`` -> raw scenario cross-product."""
+    axes: dict[str, list] = {}
+    comp_pairs: list[tuple] | None = None
+    for part in spec.split():
+        field, _, vals = part.partition("=")
+        if not vals:
+            raise ValueError(f"malformed grid axis {part!r} (want field=v1,v2)")
+        if field == "compressor":
+            comp_pairs = [_coerce("compressor", v) for v in vals.split(",")]
+        else:
+            axes[field] = [_coerce(field, v) for v in vals.split(",")]
+    scenarios = grid(**{**{k: [v] for k, v in base.items()}, **axes})
+    if comp_pairs is not None:
+        # each (name, kwargs) pair is ONE axis value — the same compressor
+        # may appear twice with different kwargs (e.g. qsgd:levels=4 and
+        # qsgd:levels=16 are distinct cells)
+        scenarios = [
+            s.replace(compressor=name, compressor_kwargs=kw)
+            for s in scenarios
+            for name, kw in comp_pairs
+        ]
+    return scenarios
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.experiments.run",
+        description="sweep the survey's taxonomy matrix and emit a comparison table",
+    )
+    p.add_argument("--grid", default=DEFAULT_GRID, help=f"axis spec (default: {DEFAULT_GRID!r})")
+    p.add_argument("--substrate", default="timeline",
+                   choices=("timeline", "training", "schedule"))
+    p.add_argument("--workers", type=int, default=16)
+    p.add_argument("--steps", type=int, default=120)
+    p.add_argument("--replicas", type=int, default=1, help="seeds per scenario (vmapped where dense)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--lr", type=float, default=0.05)
+    p.add_argument("--straggler", type=float, default=1.0,
+                   help="multiplicative slowdown of worker 0 (timeline)")
+    p.add_argument("--msg-mb", type=float, default=100.0, help="dense gradient size (MB)")
+    p.add_argument("--alpha", type=float, default=1e-3, help="link latency (s)")
+    p.add_argument("--beta", type=float, default=1e-9, help="link s/byte")
+    p.add_argument("--format", default="table", choices=("table", "csv"))
+    p.add_argument("--out", default="", help="write the table here as well as stdout")
+    args = p.parse_args(argv)
+
+    base = dict(
+        n_workers=args.workers,
+        steps=args.steps,
+        seed=args.seed,
+        lr=args.lr,
+        straggler_slowdown=args.straggler,
+        msg_bytes=args.msg_mb * 1e6,
+        alpha=args.alpha,
+        beta=args.beta,
+    )
+    raw = parse_grid(args.grid, **base)
+    scenarios = expand(raw, substrate=args.substrate)
+    dropped = [s for s in raw if s not in scenarios]
+    for s in dropped:
+        print(f"# dropped invalid cell {s.tag()}: {'; '.join(s.violations(args.substrate))}",
+              file=sys.stderr)
+    if not scenarios:
+        print("no valid scenarios in the grid", file=sys.stderr)
+        return 1
+    print(f"# sweeping {len(scenarios)} scenarios on the {args.substrate} substrate "
+          f"({len(dropped)} invalid cells dropped)", file=sys.stderr)
+
+    results = run_scenarios(scenarios, args.substrate, replicas=args.replicas)
+    title = (f"{args.substrate} sweep: {len(results)} cells, "
+             f"n={args.workers}, steps={args.steps}")
+    text = format_table(results, title=title) if args.format == "table" else format_csv(results)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

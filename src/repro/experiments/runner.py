@@ -1,0 +1,410 @@
+"""Batch execution of scenario lists on the simulation substrates.
+
+Every run returns a :class:`ScenarioResult` carrying BOTH the measured
+metrics from the substrate and the analytic cost-model prediction
+(`repro.core.costmodel`) for the same cell, so sweep tables show
+predicted-vs-measured side by side (the quantitative-survey methodology of
+Shi et al., arXiv:2005.13247).
+
+Substrates:
+
+* ``timeline``  — :func:`repro.core.simulate.simulate_timeline` (Fig. 4 /
+  Table II: throughput, staleness, idle, wire bytes under stragglers);
+* ``training``  — :func:`repro.core.simulate.simulate_training` (§VIII
+  convergence: loss / consensus / upload bits). Dense (uncompressed)
+  scenarios that share one problem run all replica seeds in ONE vmapped
+  ``lax.scan`` — shapes agree, so replicas vectorize instead of looping;
+* ``schedule``  — :func:`repro.core.schedule.simulate_schedule` (§VII
+  WFBP / MG-WFBP iteration-time model).
+
+The ``trainer`` substrate (real mesh execution of a Scenario through
+``repro.train``) lives in :mod:`repro.experiments.trainer_substrate` because
+it needs XLA host-device flags set before jax initializes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.costmodel import (
+    Link,
+    allreduce_cost,
+    gossip_cost,
+    ps_cost,
+    round_wire_bytes,
+    upload_bits,
+)
+from repro.core.schedule import LayerSpec, simulate_schedule
+from repro.core.simulate import (
+    PROBLEMS,
+    SimCfg,
+    TimelineCfg,
+    simulate_timeline,
+    simulate_training,
+)
+from repro.experiments.scenario import Scenario
+
+f64 = float
+
+
+@dataclass
+class ScenarioResult:
+    """One scenario executed on one substrate (replica-averaged)."""
+
+    scenario: Scenario
+    substrate: str
+    measured: dict[str, float]
+    predicted: dict[str, float]
+    replicas: int = 1
+    series: dict[str, np.ndarray] = field(default_factory=dict)
+
+    @property
+    def tag(self) -> str:
+        return self.scenario.tag()
+
+    def row(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"tag": self.tag, "substrate": self.substrate}
+        out.update({f"measured_{k}": v for k, v in self.measured.items()})
+        out.update({f"predicted_{k}": v for k, v in self.predicted.items()})
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Cost-model predictions (the "predicted" half of every result row).
+# ---------------------------------------------------------------------------
+
+
+#: registry-name -> Table IV compression family for the analytic bit model.
+_QUANT_BITS = {
+    "qsgd": lambda kw: math.log2(kw.get("levels", 16)) + 1,
+    "natural": lambda kw: 9.0,
+    "natural_dithering": lambda kw: 9.0,
+    "terngrad": lambda kw: math.log2(3) + 1,
+    "signsgd": lambda kw: 1.0,
+    "signsgd_packed": lambda kw: 1.0,
+    "onebit": lambda kw: 1.0,
+}
+_SPARSE = ("topk", "gtopk", "randomk", "stc", "sbc", "wangni", "threshold")
+
+
+def estimated_wire_bytes(s: Scenario) -> float:
+    """Effective bytes ONE worker uploads per communication round.
+
+    Prefers the real compressor's analytic ``wire_bits``; falls back to the
+    Table IV family model when the size is data-dependent (NaN).
+    """
+    n_elems = int(s.msg_bytes / 4)  # dense f32 elements
+    if s.compressor is None:
+        return s.msg_bytes
+    comp = s.make_compressor()
+    wb = comp.wire_bits(n_elems)
+    if wb == wb:  # not NaN
+        return wb / 8.0
+    kw = s.kwargs_dict
+    if s.compressor in _QUANT_BITS:
+        return upload_bits("quant", n_elems, levels=int(2 ** (_QUANT_BITS[s.compressor](kw) - 1))) / 8.0
+    if any(s.compressor.startswith(p) for p in _SPARSE):
+        return upload_bits("spars", n_elems, ratio=kw.get("ratio", 0.01)) / 8.0
+    return s.msg_bytes
+
+
+def rounds_per_iter(s: Scenario) -> float:
+    """Communication rounds per iteration under the sync scheme."""
+    return 1.0 / s.local_steps if s.sync == "local" else 1.0
+
+
+def _round_comm_time(s: Scenario, nbytes: float) -> float:
+    link = Link(alpha=s.alpha, beta=s.beta)
+    if s.arch == "ps":
+        return ps_cost(s.n_workers, nbytes, link, congested=s.ps_congested)
+    if s.arch == "allreduce":
+        return allreduce_cost(s.allreduce_alg, s.n_workers, nbytes, link)
+    if s.arch == "gossip":
+        return gossip_cost(nbytes, peers=s.gossip_peers, link=link)
+    raise ValueError(s.arch)
+
+
+def _round_wire_bytes(s: Scenario, nbytes: float) -> float:
+    return round_wire_bytes(s.arch, s.n_workers, nbytes, peers=s.gossip_peers)
+
+
+def predict(s: Scenario, substrate: str) -> dict[str, float]:
+    """Analytic cost-model prediction for the cell, keyed to match the
+    substrate's measured metrics."""
+    eff = estimated_wire_bytes(s)
+    rounds = rounds_per_iter(s)
+    comm_per_iter = _round_comm_time(s, eff) * rounds
+    if substrate == "timeline":
+        # straggler-free alpha-beta estimate; the simulator adds the
+        # straggler/congestion dynamics on top.
+        iter_time = s.compute_time + comm_per_iter
+        return {
+            "iter_time": iter_time,
+            "throughput": s.n_workers / iter_time,
+            "comm_frac": comm_per_iter / iter_time,
+            "bytes_per_worker": _round_wire_bytes(s, eff) * rounds * s.steps,
+        }
+    if substrate == "training":
+        dim_bits = 32.0 * (eff / s.msg_bytes)  # effective bits per element
+        return {
+            "bits_per_element": dim_bits,
+            "compression_x": s.msg_bytes / eff,
+            "comm_time_per_step": comm_per_iter,
+        }
+    if substrate == "schedule":
+        layers = layer_profile(s.layer_profile)
+        link = Link(alpha=s.alpha, beta=s.beta)
+        bwd = sum(l.backward_time for l in layers)
+        per_layer = sum(
+            allreduce_cost(s.allreduce_alg, s.n_workers, l.grad_bytes, link) for l in layers
+        )
+        return {
+            "no_overlap_time": bwd + per_layer,
+            "full_overlap_bound": max(bwd, per_layer),
+        }
+    raise ValueError(substrate)
+
+
+# ---------------------------------------------------------------------------
+# Layer profiles for the schedule substrate (shared with benchmarks).
+# ---------------------------------------------------------------------------
+
+
+def _resnet50_profile() -> list[LayerSpec]:
+    # 161 gradient tensors, mostly small — the MG-WFBP motivation.
+    layers = [
+        LayerSpec(f"conv{i}", grad_bytes=25.5e6 * 4 / 160, backward_time=5e-3 / 160)
+        for i in range(160)
+    ]
+    layers.append(LayerSpec("fc", grad_bytes=8e6, backward_time=5e-4))
+    return layers
+
+
+def _transformer32_profile() -> list[LayerSpec]:
+    return [
+        LayerSpec(f"block{i}", grad_bytes=12 * 4096 * 4096 * 2, backward_time=3e-3)
+        for i in range(32)
+    ]
+
+
+def _uniform16_profile() -> list[LayerSpec]:
+    return [
+        LayerSpec(f"layer{i}", grad_bytes=4e6, backward_time=1e-3) for i in range(16)
+    ]
+
+
+LAYER_PROFILES = {
+    "resnet50": _resnet50_profile,
+    "transformer32": _transformer32_profile,
+    "uniform16": _uniform16_profile,
+}
+
+
+def layer_profile(name: str) -> list[LayerSpec]:
+    if name not in LAYER_PROFILES:
+        raise KeyError(f"unknown layer profile {name!r}; known: {sorted(LAYER_PROFILES)}")
+    return LAYER_PROFILES[name]()
+
+
+# ---------------------------------------------------------------------------
+# Substrate mappings.
+# ---------------------------------------------------------------------------
+
+
+def to_timeline_cfg(s: Scenario, seed: int | None = None) -> TimelineCfg:
+    return TimelineCfg(
+        n_workers=s.n_workers,
+        iters=s.steps,
+        compute_mean=s.compute_time,
+        straggler_sigma=s.straggler_sigma,
+        straggler_worker_slowdown=s.straggler_slowdown,
+        alpha=s.alpha,
+        beta=s.beta,
+        msg_bytes=estimated_wire_bytes(s),
+        server_bw_share=s.ps_congested,
+        sync=s.sync,
+        staleness=s.staleness,
+        local_steps=s.local_steps,
+        arch=s.arch,
+        seed=s.seed if seed is None else seed,
+    )
+
+
+def to_sim_cfg(s: Scenario, seed: int | None = None) -> SimCfg:
+    # In the exact-SGD simulator PS and all-reduce compute the same mean;
+    # the architecture distinguishes them only in the cost model. Gossip
+    # changes the dynamics (neighbor mixing instead of exact averaging).
+    sync = "gossip" if s.arch == "gossip" else s.sync
+    return SimCfg(
+        n_workers=s.n_workers,
+        sync=sync,
+        staleness=s.staleness,
+        local_steps=s.local_steps,
+        compressor=s.make_compressor(),
+        error_feedback=s.error_feedback,
+        lr=s.lr,
+        steps=s.steps,
+        seed=s.seed if seed is None else seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dense-scenario vmapped training fast path.
+# ---------------------------------------------------------------------------
+
+
+def _vmappable(s: Scenario) -> bool:
+    """Replica seeds vectorize when the per-step update is a pure jax
+    function of (X, key): dense gradients, no delay lines."""
+    if s.compressor is not None:
+        return False
+    if s.arch == "gossip":
+        return s.sync == "bsp"
+    return s.sync in ("bsp", "local")
+
+
+def _simulate_training_vmapped(s: Scenario, seeds: list[int]) -> list[dict[str, np.ndarray]]:
+    """All replica seeds in one jitted lax.scan, vmapped over the seed axis.
+
+    Mirrors :func:`simulate_training`'s dense bsp/local/gossip dynamics and
+    bit accounting; only the (identical-shape) RNG keys differ per replica.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    grad_fn, loss_fn, x0, x_star = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
+    n, dim = s.n_workers, x0.size
+    gossip = s.arch == "gossip"
+    W = None
+    if gossip:
+        from repro.core.gossip import ring_mixing_matrix
+
+        W = jnp.asarray(ring_mixing_matrix(n, 1.0 / 3.0), jnp.float32)
+
+    widx = jnp.arange(n)
+
+    def step(carry, t):
+        X, key = carry
+        key, k1, _ = jax.random.split(key, 3)
+        gkeys = jax.random.split(k1, n)
+        G = jax.vmap(grad_fn)(X, widx, gkeys)
+        if gossip:
+            X = W @ (X - s.lr * G)
+            round_bits = 32.0 * dim * n
+        elif s.sync == "local":
+            X = X - s.lr * G
+            is_sync = (t + 1) % s.local_steps == 0
+            X = jnp.where(is_sync, jnp.tile(jnp.mean(X, axis=0)[None], (n, 1)), X)
+            round_bits = jnp.where(is_sync, 32.0 * dim * n, 0.0)
+        else:  # bsp
+            X = X - s.lr * jnp.mean(G, axis=0)[None, :]
+            round_bits = 32.0 * dim * n
+        xbar = jnp.mean(X, axis=0)
+        out = (
+            loss_fn(xbar),
+            jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1)),
+            round_bits,
+        )
+        return (X, key), out
+
+    def one_replica(seed_key):
+        X = jnp.tile(x0[None], (n, 1))
+        (Xf, _), (losses, cons, rbits) = jax.lax.scan(
+            step, (X, seed_key), jnp.arange(s.steps)
+        )
+        return losses, cons, jnp.cumsum(rbits), jnp.linalg.norm(jnp.mean(Xf, 0) - x_star)
+
+    keys = jnp.stack([jax.random.key(sd) for sd in seeds])
+    losses, cons, bits, errs = jax.jit(jax.vmap(one_replica))(keys)
+    return [
+        {
+            "loss": np.asarray(losses[r]),
+            "consensus": np.asarray(cons[r]),
+            "bits": np.asarray(bits[r]),
+            "x_star_err": float(errs[r]),
+        }
+        for r in range(len(seeds))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The batch runner.
+# ---------------------------------------------------------------------------
+
+
+def _agg(vals: list[float]) -> float:
+    return float(np.mean(vals))
+
+
+def run_scenario(s: Scenario, substrate: str = "timeline", *, replicas: int = 1) -> ScenarioResult:
+    """Execute one scenario; replica seeds are ``seed, seed+1, ...``."""
+    bad = s.violations(substrate)
+    if bad:
+        raise ValueError(f"invalid scenario {s.tag()} on {substrate}: {'; '.join(bad)}")
+    seeds = [s.seed + r for r in range(replicas)]
+    pred = predict(s, substrate) if substrate != "trainer" else {}
+
+    if substrate == "timeline":
+        runs = [simulate_timeline(to_timeline_cfg(s, seed=sd)).row() for sd in seeds]
+        measured = {k: _agg([r[k] for r in runs]) for k in runs[0]}
+        # iter_time = makespan / iters = n_workers / throughput (global
+        # throughput counts every worker's iterations).
+        measured["iter_time"] = _agg([s.n_workers / r["throughput"] for r in runs])
+        return ScenarioResult(s, substrate, measured, pred, replicas=replicas)
+
+    if substrate == "training":
+        if _vmappable(s):
+            outs = _simulate_training_vmapped(s, seeds)
+        else:
+            problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
+            outs = [simulate_training(to_sim_cfg(s, seed=sd), problem=problem) for sd in seeds]
+        measured = {
+            "final_loss": _agg([float(o["loss"][-1]) for o in outs]),
+            "x_star_err": _agg([o["x_star_err"] for o in outs]),
+            "consensus": _agg([float(o["consensus"][-1]) for o in outs]),
+            "gbits": _agg([float(o["bits"][-1]) for o in outs]) / 1e9,
+        }
+        if replicas > 1:
+            measured["final_loss_std"] = float(
+                np.std([float(o["loss"][-1]) for o in outs])
+            )
+        series = {
+            "loss": np.stack([o["loss"] for o in outs]),
+            "consensus": np.stack([o["consensus"] for o in outs]),
+            "bits": np.stack([o["bits"] for o in outs]),
+        }
+        return ScenarioResult(s, substrate, measured, pred, replicas=replicas, series=series)
+
+    if substrate == "schedule":
+        r = simulate_schedule(
+            layer_profile(s.layer_profile),
+            n_workers=s.n_workers,
+            link=Link(alpha=s.alpha, beta=s.beta),
+            alg=s.allreduce_alg,
+            mode=s.schedule,
+            bucket_bytes=s.bucket_bytes,
+        )
+        measured = {k: float(v) for k, v in r.items()}
+        return ScenarioResult(s, substrate, measured, pred, replicas=1)
+
+    if substrate == "trainer":
+        from repro.experiments.trainer_substrate import run_trainer_scenario
+
+        return run_trainer_scenario(s)
+
+    raise ValueError(f"unknown substrate {substrate!r}")
+
+
+def run_scenarios(
+    scenarios: list[Scenario],
+    substrate: str = "timeline",
+    *,
+    replicas: int = 1,
+) -> list[ScenarioResult]:
+    """Run every scenario, preserving order. Invalid cells raise — filter
+    with :func:`repro.experiments.scenario.expand` first."""
+    return [run_scenario(s, substrate, replicas=replicas) for s in scenarios]

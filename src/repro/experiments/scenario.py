@@ -1,0 +1,237 @@
+"""One point in the survey's taxonomy matrix, and helpers to enumerate it.
+
+A :class:`Scenario` pins every knob of the four dimensions (Table I):
+
+* **synchronization** (§III): ``sync`` + SSP bound / ASP delay / Local-SGD H;
+* **architecture** (§IV): PS / all-reduce (+ Table III algorithm) / gossip;
+* **compression** (§V/§VI): registry compressor + kwargs + error feedback;
+* **scheduling** (§VII): sequential / WFBP / MG-WFBP + bucket size;
+
+plus the workload (objective, layer profile, worker count, steps) and the
+alpha-beta link parameters shared by all cost models.
+
+``grid()`` crosses axis value-lists into the raw product; ``expand()``
+additionally drops combinations that are invalid — either universally
+(all-reduce is a synchronous collective, so it cannot serve ASP/SSP) or for
+a given substrate (SSP/ASP exist only in the simulators; they cannot run in
+one SPMD program — see repro.core.sync).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Iterable, Mapping
+
+SYNC_SCHEMES = ("bsp", "ssp", "asp", "local", "post_local")
+ARCHITECTURES = ("ps", "allreduce", "gossip")
+SCHEDULE_MODES = ("sequential", "wfbp", "mgwfbp")
+SUBSTRATES = ("timeline", "training", "schedule", "trainer")
+
+#: sync schemes that only exist in the simulators (no single SPMD program
+#: can express bounded staleness / full asynchrony — repro.core.sync).
+SIMULATE_ONLY_SYNC = ("ssp", "asp")
+
+
+def _freeze_kwargs(kw: Mapping[str, Any] | Iterable | None) -> tuple:
+    if not kw:
+        return ()
+    if isinstance(kw, Mapping):
+        return tuple(sorted(kw.items()))
+    return tuple(sorted(tuple(kw)))
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A single taxonomy cell. Frozen + hashable so scenario lists can be
+    deduplicated, cached, and used as dict keys by sweep drivers."""
+
+    # --- synchronization (§III) ---------------------------------------------
+    sync: str = "bsp"  # bsp | ssp | asp | local | post_local (trainer only)
+    staleness: int = 4  # SSP bound / ASP fixed delay
+    local_steps: int = 8  # Local-SGD H
+    post_local_switch: int = 0  # post-local SGD: step where BSP -> local
+    pod_local: bool = False  # BSP inside pods, Local-SGD across (§III-D)
+
+    # --- architecture (§IV) --------------------------------------------------
+    arch: str = "allreduce"  # ps | allreduce | gossip
+    allreduce_alg: str = "ring"  # Table III algorithm
+    ps_congested: bool = True  # server link shared by all uploads
+    gossip_peers: int = 2
+    gossip_compress: str = "none"  # trainer substrate: choco | dcd | none
+
+    # --- compression (§V/§VI) ------------------------------------------------
+    compressor: str | None = None  # repro.core.compression registry name
+    compressor_kwargs: tuple = ()  # frozen (key, value) pairs
+    error_feedback: bool = False
+
+    # --- scheduling (§VII) ---------------------------------------------------
+    schedule: str = "wfbp"  # sequential | wfbp | mgwfbp
+    bucket_bytes: float = 0.0  # MG-WFBP bucket size (bytes)
+
+    # --- workload ------------------------------------------------------------
+    objective: str = "quadratic"  # training substrate: quadratic | logistic
+    layer_profile: str = "resnet50"  # schedule substrate layer shapes
+    n_workers: int = 8
+    steps: int = 300
+    lr: float = 0.05
+    grad_noise: float = 0.1  # stochastic-gradient noise scale (training)
+    seed: int = 0
+    compute_time: float = 1.0  # mean per-iteration compute (timeline)
+    straggler_sigma: float = 0.2  # lognormal compute-time spread
+    straggler_slowdown: float = 1.0  # multiplicative slowdown of worker 0
+
+    # --- link / message model ------------------------------------------------
+    alpha: float = 1e-3  # per-message latency (s)
+    beta: float = 1e-9  # per-byte time (s/B)
+    msg_bytes: float = 4 * 25e6  # dense gradient size on the wire
+
+    def __post_init__(self):
+        object.__setattr__(self, "compressor_kwargs",
+                           _freeze_kwargs(self.compressor_kwargs))
+        if self.compressor in ("none", ""):
+            object.__setattr__(self, "compressor", None)
+
+    # -- convenience ----------------------------------------------------------
+
+    @property
+    def kwargs_dict(self) -> dict[str, Any]:
+        return dict(self.compressor_kwargs)
+
+    def make_compressor(self):
+        """Instantiate the registry compressor (None for the dense cell)."""
+        if self.compressor is None:
+            return None
+        from repro.core.compression import get_compressor
+
+        return get_compressor(self.compressor, **self.kwargs_dict)
+
+    def tag(self) -> str:
+        """Stable human-readable cell name, e.g. ``local_H8/ring/topk_ef``."""
+        sync = self.sync
+        if sync == "local":
+            sync = f"local_H{self.local_steps}"
+        elif sync == "post_local":
+            sync = f"postlocal{self.post_local_switch}_H{self.local_steps}"
+        elif sync in ("ssp", "asp"):
+            sync = f"{sync}_s{self.staleness}"
+        arch = self.arch if self.arch != "allreduce" else self.allreduce_alg
+        comp = self.compressor or "none"
+        if self.compressor_kwargs:
+            comp += "[" + ",".join(f"{k}={v}" for k, v in self.compressor_kwargs) + "]"
+        if self.error_feedback:
+            comp += "_ef"
+        sched = self.schedule
+        if sched == "mgwfbp":
+            sched += f"_{int(self.bucket_bytes / 1e6)}MB"
+        return f"{sync}/{arch}/{comp}/{sched}"
+
+    def replace(self, **kw) -> "Scenario":
+        return replace(self, **kw)
+
+    # -- validity -------------------------------------------------------------
+
+    def violations(self, substrate: str | None = None) -> list[str]:
+        """Why this taxonomy cell is meaningless (empty list = valid)."""
+        v: list[str] = []
+        if self.sync not in SYNC_SCHEMES:
+            v.append(f"unknown sync {self.sync!r}")
+        if self.arch not in ARCHITECTURES:
+            v.append(f"unknown arch {self.arch!r}")
+        if self.schedule not in SCHEDULE_MODES:
+            v.append(f"unknown schedule {self.schedule!r}")
+        # Table II: an all-reduce is a synchronous collective — every worker
+        # participates in the same round, so there is no ASP/SSP cell.
+        if self.arch == "allreduce" and self.sync in ("asp", "ssp"):
+            v.append("all-reduce is collective: incompatible with asp/ssp")
+        if self.sync in ("local", "post_local") and self.local_steps < 2:
+            v.append("local SGD needs local_steps >= 2")
+        if self.sync == "post_local" and substrate not in (None, "trainer"):
+            v.append("post_local is trainer-only (the simulators model plain local SGD)")
+        if self.sync in ("ssp", "asp") and self.staleness < 1:
+            v.append("ssp/asp need staleness >= 1")
+        if self.error_feedback and self.compressor is None:
+            v.append("error feedback without a compressor is a no-op")
+        if self.schedule == "mgwfbp" and self.bucket_bytes <= 0:
+            v.append("mgwfbp needs bucket_bytes > 0")
+        # pod-local is BSP inside each pod by construction; the loose outer
+        # boundary is the Local-SGD axis — stale schemes don't compose.
+        if self.pod_local and self.sync not in ("bsp", "local"):
+            v.append("pod_local forces BSP inside pods (sync must be bsp/local)")
+        if self.n_workers < 2:
+            v.append("need >= 2 workers for a distributed scenario")
+        if substrate is not None:
+            if substrate not in SUBSTRATES:
+                v.append(f"unknown substrate {substrate!r}")
+            if substrate == "trainer" and self.sync in SIMULATE_ONLY_SYNC:
+                v.append(f"{self.sync} is simulate-only (no SPMD realization)")
+            if substrate == "trainer" and self.arch == "ps":
+                v.append("the mesh runtime has no parameter server (simulate-only)")
+            if substrate == "training" and self.arch == "gossip" and self.sync != "bsp":
+                v.append("gossip training is a synchronous mixing round (sync must be bsp)")
+        return v
+
+    def is_valid(self, substrate: str | None = None) -> bool:
+        return not self.violations(substrate)
+
+
+_FIELDS = {f.name for f in fields(Scenario)}
+
+
+def grid(**axes) -> list[Scenario]:
+    """Cross-product of axis value lists into the RAW scenario list.
+
+    Each keyword is a Scenario field name mapped to one value or a list of
+    values: ``grid(sync=["bsp", "local"], arch=["ps", "allreduce"])`` -> 4
+    scenarios. No validity filtering — see :func:`expand`.
+    """
+    for name in axes:
+        if name not in _FIELDS:
+            raise KeyError(f"unknown Scenario field {name!r}; known: {sorted(_FIELDS)}")
+    names = list(axes)
+    # compressor_kwargs is itself tuple/dict-valued: a LIST is an axis of
+    # kwarg sets, anything else (dict, tuple of pairs) is one value.
+    value_lists = [
+        (list(vs) if isinstance(vs, list) else [vs])
+        if name == "compressor_kwargs"
+        else (list(vs) if isinstance(vs, (list, tuple)) else [vs])
+        for name, vs in axes.items()
+    ]
+    out = []
+    for combo in itertools.product(*value_lists):
+        out.append(Scenario(**dict(zip(names, combo))))
+    return out
+
+
+def expand(
+    axes_or_scenarios,
+    *,
+    substrate: str | None = None,
+    on_invalid: str = "drop",  # drop | error | keep
+    **axes,
+) -> list[Scenario]:
+    """Grid expansion + validity filtering in one call.
+
+    Accepts either a ready scenario list or grid axes (as the first positional
+    dict or as keywords). Invalid cells are dropped by default; ``error``
+    raises listing every violation; ``keep`` returns them anyway (for tests
+    that probe the filter itself).
+    """
+    if axes_or_scenarios is None:
+        scenarios = grid(**axes)
+    elif isinstance(axes_or_scenarios, dict):
+        scenarios = grid(**{**axes_or_scenarios, **axes})
+    else:
+        scenarios = list(axes_or_scenarios)
+        if axes:
+            raise TypeError("pass either a scenario list or grid axes, not both")
+    if on_invalid == "keep":
+        return scenarios
+    valid, bad = [], []
+    for s in scenarios:
+        v = s.violations(substrate)
+        (valid if not v else bad).append((s, v))
+    if bad and on_invalid == "error":
+        msg = "; ".join(f"{s.tag()}: {', '.join(v)}" for s, v in bad)
+        raise ValueError(f"invalid scenarios: {msg}")
+    return [s for s, _ in valid]

@@ -1,0 +1,113 @@
+"""Run a Scenario on the REAL mesh runtime (repro.train) — the setup that
+``examples/local_sgd_vs_bsp.py``, ``examples/compression_comparison.py`` and
+``examples/gossip_decentralized.py`` used to hand-wire per cell.
+
+Import note: callers must set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+*before* jax initializes (the examples do this at the top of the file);
+this module assumes the devices already exist.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.experiments.runner import ScenarioResult
+from repro.experiments.scenario import Scenario
+
+
+def to_comm_config(s: Scenario):
+    """Scenario -> the runtime CommConfig knobs (repro.core.types)."""
+    from repro.core.types import CommConfig
+
+    bad = s.violations("trainer")
+    if bad:
+        raise ValueError(f"scenario {s.tag()} cannot run on the mesh: {'; '.join(bad)}")
+    return CommConfig(
+        compressor=s.compressor or "none",
+        compressor_kwargs=s.kwargs_dict,
+        error_feedback=s.error_feedback,
+        sync=s.sync,
+        local_steps=s.local_steps if s.sync in ("local", "post_local") else 1,
+        post_local_switch=s.post_local_switch,
+        pod_local=s.pod_local,
+        aggregator="gossip" if s.arch == "gossip" else "allreduce",
+        gossip_compress=s.gossip_compress,
+        bucket_mb=s.bucket_bytes / 1e6,
+    )
+
+
+def sync_rounds(s: Scenario, steps: int) -> int:
+    """Parameter/gradient synchronization rounds a Scenario performs."""
+    if s.sync == "local":
+        return steps // s.local_steps
+    if s.sync == "post_local":
+        return s.post_local_switch + (steps - s.post_local_switch) // s.local_steps
+    return steps
+
+
+def make_tiny_workload(vocab: int = 128, batch: int = 64, seq: int = 16):
+    """The shared micro-model + bigram data source of the comparison
+    examples: small enough for host-device smoke runs, real enough that
+    compression/sync choices separate the loss curves."""
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.data.pipeline import BigramSource
+
+    cfg = get_config("qwen3-0.6b").reduced().with_updates(
+        vocab=vocab, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
+    shape = InputShape("train", batch, seq, "train")
+    src = BigramSource(cfg.vocab, seed=0)
+
+    class Data:
+        def batch(self, step):
+            return src.batch(step, shape.global_batch, shape.seq_len)
+
+    return cfg, shape, Data()
+
+
+def run_trainer_scenario(
+    s: Scenario,
+    *,
+    data_par: int | None = None,
+    model_par: int = 1,
+    momentum: float = 0.0,
+    log_every: int | None = None,
+) -> ScenarioResult:
+    """Train the tiny workload under the scenario's CommConfig; measures
+    final loss, wire bytes per step (from the comms capture log) and the
+    number of synchronization rounds."""
+    import numpy as np
+
+    from repro.core import comms
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim.optimizers import momentum_sgd
+    from repro.optim.schedules import constant
+    from repro.train.steps import build_bundle
+    from repro.train.trainer import Trainer
+
+    comm = to_comm_config(s)
+    cfg, shape, data = make_tiny_workload()
+    dp = data_par or s.n_workers
+    mesh = make_test_mesh(data=dp, model=model_par)
+
+    with comms.capture() as log:
+        bundle = build_bundle(cfg, mesh, comm, momentum_sgd(momentum), shape)
+        trainer = Trainer(bundle, data, constant(s.lr),
+                          log_every=log_every or max(1, s.steps - 1))
+        trainer.fit(trainer.init(), s.steps)
+
+    by_tag = log.by_tag()
+    wire_per_step = by_tag.get("grad_agg", 0.0)
+    if s.sync in ("local", "post_local"):
+        wire_per_step = by_tag.get("local_sgd_sync", 0.0) / s.local_steps
+    if s.arch == "gossip":
+        wire_per_step = by_tag.get("gossip_mix", wire_per_step) or wire_per_step
+
+    measured: dict[str, Any] = {
+        "final_loss": float(trainer.history[-1]["loss"]),
+        "wire_kb_per_step": wire_per_step / 1e3,
+        "sync_rounds": float(sync_rounds(s, s.steps)),
+    }
+    series = {"loss": np.asarray([h["loss"] for h in trainer.history])}
+    return ScenarioResult(s, "trainer", measured, predicted={}, replicas=1,
+                          series=series)

@@ -1,10 +1,13 @@
 """Mesh construction. Importing this module never touches jax device state;
-``make_production_mesh`` is a function per the dry-run contract."""
+``make_production_mesh`` is a function per the dry-run contract.
+
+Meshes are built through :mod:`repro.compat` so ``axis_types`` is forwarded
+on jax versions that support it and silently dropped on those that don't.
+"""
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -13,13 +16,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     DCN/loose boundary (BSP across it, or the Local-SGD axis)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over however many (host) devices are available."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size as compat_axis_size
+
 from repro.configs.base import ModelConfig
 from repro.core.comms import all_gather, all_to_all, pmax, psum
 from repro.models.sharding import AxisCtx, ParamDef, ShapePlan
@@ -145,7 +147,7 @@ def moe_ffn(
     x: jax.Array,
     ax: AxisCtx,
     *,
-    capacity_factor: float = 1.25,
+    capacity_factor: float | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Dropping-style top-k MoE with expert parallelism.
 
@@ -179,7 +181,8 @@ def moe_ffn(
     flat_w = top_p.reshape(-1)
     local = (flat_e >= lo) & (flat_e < lo + E_l)
     le = jnp.where(local, flat_e - lo, 0)
-    C = max(1, int(capacity_factor * T * k / E))
+    cf = cfg.moe_capacity_factor if capacity_factor is None else capacity_factor
+    C = max(1, int(cf * T * k / E))
     onehot = jax.nn.one_hot(le, E_l, dtype=jnp.int32) * local[:, None].astype(jnp.int32)
     pos = jnp.cumsum(onehot, axis=0) - onehot  # position within expert
     slot_in_e = jnp.sum(pos * onehot, axis=-1)
@@ -536,10 +539,10 @@ def _cache_write(cache, new, pos, window, seq_axes):
     S_l = cache["pos"].shape[0]
     n_shards = 1
     for axn in seq_axes:
-        n_shards *= jax.lax.axis_size(axn)
+        n_shards *= compat_axis_size(axn)
     shard = 0
     for axn in seq_axes:
-        shard = shard * jax.lax.axis_size(axn) + jax.lax.axis_index(axn)
+        shard = shard * compat_axis_size(axn) + jax.lax.axis_index(axn)
     S_alloc = S_l * n_shards
     slot_global = pos % S_alloc
     owner = slot_global // S_l

@@ -13,6 +13,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size as compat_axis_size
+
 f32 = jnp.float32
 
 
@@ -95,13 +97,13 @@ def zero1(opt: Optimizer, data_axes: tuple[str, ...]) -> Optimizer:
     def n_shards():
         n = 1
         for a in data_axes:
-            n *= jax.lax.axis_size(a)
+            n *= compat_axis_size(a)
         return n
 
     def shard_index():
         i = jnp.zeros((), jnp.int32)
         for a in data_axes:
-            i = i * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            i = i * compat_axis_size(a) + jax.lax.axis_index(a)
         return i
 
     def _slice(leaf):

@@ -29,6 +29,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+
+from repro.compat import shard_map, axis_size as compat_axis_size
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import aggregate, comms, gossip, sync
 from repro.core.compression.base import get_compressor
@@ -94,7 +96,7 @@ def _fix_model_grads(grads: Any, specs: Any, model_axis: str) -> Any:
     (tests/test_tp_equivalence.py).  The replicated-leaf psums are real wire
     traffic (tagged 'tp_grad_fixup' in the roofline accounting)."""
 
-    msize = jax.lax.axis_size(model_axis)
+    msize = compat_axis_size(model_axis)
 
     def fix(g, s):
         if _mentions_model(s):
@@ -219,7 +221,7 @@ def build_bundle(
                 "step": jnp.zeros((), jnp.int32)}
 
     init_state = jax.jit(
-        jax.shard_map(_init, mesh=mesh, in_specs=(param_specs,), out_specs=state_specs,
+        shard_map(_init, mesh=mesh, in_specs=(param_specs,), out_specs=state_specs,
                       check_vma=False)
     )
 
@@ -278,7 +280,7 @@ def build_bundle(
             )
 
         return jax.jit(
-            jax.shard_map(
+            shard_map(
                 _step, mesh=mesh,
                 in_specs=(state_specs, batch_pspecs, P()),
                 out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
@@ -296,7 +298,7 @@ def build_bundle(
         return {**state, "params": params}
 
     sync_step = (
-        jax.jit(jax.shard_map(_sync, mesh=mesh, in_specs=(state_specs,),
+        jax.jit(shard_map(_sync, mesh=mesh, in_specs=(state_specs,),
                               out_specs=state_specs, check_vma=False),
                 donate_argnums=(0,))
         if comm.sync in ("local", "post_local") or comm.pod_local
@@ -341,7 +343,7 @@ def build_bundle(
                      "step": state["step"] + 1}, out)
 
         gossip_step = jax.jit(
-            jax.shard_map(_gstep, mesh=mesh,
+            shard_map(_gstep, mesh=mesh,
                           in_specs=(state_specs, batch_pspecs, P()),
                           out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
                           check_vma=False),
@@ -354,7 +356,7 @@ def build_bundle(
         return comms.pmean(loss, ax.data)
 
     eval_step = jax.jit(
-        jax.shard_map(_eval, mesh=mesh, in_specs=(state_specs, batch_pspecs),
+        shard_map(_eval, mesh=mesh, in_specs=(state_specs, batch_pspecs),
                       out_specs=P(), check_vma=False)
     )
 
@@ -406,7 +408,7 @@ def build_serve(cfg: ModelConfig, mesh, shape: InputShape) -> ServeBundle:
         return last, cache
 
     prefill_step = jax.jit(
-        jax.shard_map(_prefill, mesh=mesh, in_specs=(param_specs, batch_pspecs),
+        shard_map(_prefill, mesh=mesh, in_specs=(param_specs, batch_pspecs),
                       out_specs=(P(baxes), cache_pspecs), check_vma=False)
     )
 
@@ -416,7 +418,7 @@ def build_serve(cfg: ModelConfig, mesh, shape: InputShape) -> ServeBundle:
         )
 
     serve_step = jax.jit(
-        jax.shard_map(_serve, mesh=mesh,
+        shard_map(_serve, mesh=mesh,
                       in_specs=(param_specs, cache_pspecs, tok_pspec),
                       out_specs=(tok_pspec, cache_pspecs), check_vma=False),
         donate_argnums=(1,),

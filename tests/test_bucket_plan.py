@@ -5,7 +5,7 @@ sizes are consistent, and gather/scatter round-trips exactly."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import aggregate
 from repro.core.types import CommConfig

@@ -8,19 +8,20 @@ from tests.helpers import run_subprocess_devices
 
 SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.compat import AxisType, make_mesh, shard_map
 from repro.core import collectives, comms, aggregate, gossip
 from repro.core.types import CommConfig
 from repro.core.compression import get_compressor
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 x = jax.random.normal(jax.random.key(0), (8, 1000))
 
 # --- manual schedules == psum (exact) --------------------------------------
 for impl in ("ring", "rhd"):
     def f(v):
         return collectives.allreduce(v[0], ("data",), impl=impl)
-    got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+    got = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
                                 check_vma=False))(x)
     want = jnp.tile(x.sum(0)[None], (8, 1))
     np.testing.assert_allclose(np.asarray(got).reshape(8, -1), np.asarray(want),
@@ -29,7 +30,7 @@ for impl in ("ring", "rhd"):
 
 # --- byte accounting: ring moves 2N(n-1)/n ---------------------------------
 with comms.capture() as log:
-    jax.jit(jax.shard_map(lambda v: collectives.allreduce(v[0], ("data",), impl="ring"),
+    jax.jit(shard_map(lambda v: collectives.allreduce(v[0], ("data",), impl="ring"),
             mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
            ).lower(jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile()
 byts = log.total_bytes()
@@ -47,7 +48,7 @@ def agg_with(comm):
         state = aggregate.init_comm_state(comm, plan)
         out, _ = aggregate.aggregate_gradients(comm, plan, g, state, jax.random.key(0), ("data",))
         return out
-    return jax.jit(jax.shard_map(f, mesh=mesh,
+    return jax.jit(shard_map(f, mesh=mesh,
         in_specs=({k: P("data") for k in grads},), out_specs={"w": P(), "b": P()},
         check_vma=False))(grads)
 
@@ -78,7 +79,7 @@ params = [jax.random.normal(jax.random.key(3), (8, 128))]
 def mix(v):
     out = gossip.dpsgd_mix([v[0][0]], ("data",))
     return out[0]
-mixed = jax.jit(jax.shard_map(lambda v: mix([v]), mesh=mesh, in_specs=P("data"),
+mixed = jax.jit(shard_map(lambda v: mix([v]), mesh=mesh, in_specs=P("data"),
                 out_specs=P("data"), check_vma=False))(params[0])
 np.testing.assert_allclose(np.asarray(mixed.reshape(8, -1).mean(0)),
                            np.asarray(params[0].mean(0)), rtol=1e-5, atol=1e-6)
@@ -92,7 +93,7 @@ def choco_rounds(v):
     for t in range(60):
         xs, st = gossip.choco_mix(comm, comp, jax.random.fold_in(jax.random.key(9), t), xs, st, ("data",))
     return xs[0]
-out = jax.jit(jax.shard_map(choco_rounds, mesh=mesh, in_specs=P("data"),
+out = jax.jit(shard_map(choco_rounds, mesh=mesh, in_specs=P("data"),
               out_specs=P("data"), check_vma=False))(params[0])
 out = np.asarray(out).reshape(8, -1)
 spread0 = np.linalg.norm(np.asarray(params[0]) - np.asarray(params[0]).mean(0), axis=1).mean()

@@ -1,0 +1,236 @@
+"""Scenario-matrix engine: grid expansion, validity filtering, determinism,
+replica vmapping, and the paper's golden qualitative relations."""
+
+import numpy as np
+import pytest
+
+from repro.experiments import Scenario, expand, grid, run_scenario, run_scenarios
+from repro.experiments.runner import (
+    _simulate_training_vmapped,
+    _vmappable,
+    estimated_wire_bytes,
+    to_sim_cfg,
+)
+from repro.experiments.run import main as cli_main, parse_grid
+from repro.experiments.tables import format_csv, format_table
+
+
+# ---------------------------------------------------------------------------
+# grid / expand
+# ---------------------------------------------------------------------------
+
+
+def test_grid_cross_product():
+    scenarios = grid(sync=["bsp", "local", "asp"], arch=["ps", "allreduce"],
+                     compressor=[None, "qsgd"])
+    assert len(scenarios) == 3 * 2 * 2
+    assert len(set(scenarios)) == 12  # frozen + hashable -> all distinct
+    assert {s.sync for s in scenarios} == {"bsp", "local", "asp"}
+
+
+def test_grid_unknown_field_raises():
+    with pytest.raises(KeyError, match="unknown Scenario field"):
+        grid(synchronization=["bsp"])
+
+
+def test_grid_scalar_values_broadcast():
+    scenarios = grid(sync=["bsp", "local"], n_workers=4)
+    assert all(s.n_workers == 4 for s in scenarios)
+
+
+def test_expand_filters_collective_async():
+    raw = grid(sync=["bsp", "ssp", "asp"], arch=["ps", "allreduce", "gossip"])
+    valid = expand(raw)
+    # all-reduce x {ssp, asp} are the only universally-invalid cells here
+    assert len(valid) == 9 - 2
+    assert all(not (s.arch == "allreduce" and s.sync in ("ssp", "asp")) for s in valid)
+
+
+def test_expand_error_mode_lists_violations():
+    bad = [Scenario(sync="asp", arch="allreduce")]
+    with pytest.raises(ValueError, match="collective"):
+        expand(bad, on_invalid="error")
+
+
+def test_validity_rules():
+    assert Scenario().is_valid()
+    assert not Scenario(error_feedback=True).is_valid()  # EF without compressor
+    assert Scenario(error_feedback=True, compressor="topk").is_valid()
+    assert not Scenario(sync="local", local_steps=1).is_valid()
+    assert not Scenario(schedule="mgwfbp", bucket_bytes=0).is_valid()
+    assert Scenario(schedule="mgwfbp", bucket_bytes=8e6).is_valid()
+    assert not Scenario(pod_local=True, sync="asp").is_valid()
+    assert not Scenario(n_workers=1).is_valid()
+
+
+def test_substrate_specific_validity():
+    ssp = Scenario(sync="ssp", arch="ps")
+    assert ssp.is_valid("timeline")
+    assert not ssp.is_valid("trainer")  # SSP is simulate-only
+    assert not Scenario(arch="ps").is_valid("trainer")  # runtime has no PS
+    post = Scenario(sync="post_local", local_steps=8, post_local_switch=40)
+    assert post.is_valid("trainer")
+    assert not post.is_valid("timeline")
+
+
+def test_scenario_tag_and_kwargs_freezing():
+    s = Scenario(sync="local", local_steps=4, compressor="topk",
+                 compressor_kwargs={"ratio": 0.05}, error_feedback=True)
+    assert s.tag() == "local_H4/ring/topk[ratio=0.05]_ef/wfbp"
+    assert s.kwargs_dict == {"ratio": 0.05}
+    assert hash(s) == hash(s.replace())  # dict kwargs froze to tuple
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("substrate,kw", [
+    ("timeline", dict(sync="asp", arch="ps", steps=40, n_workers=4)),
+    ("training", dict(sync="bsp", steps=30, n_workers=4)),
+    ("training", dict(sync="asp", arch="ps", steps=30, n_workers=4)),
+    ("schedule", dict(schedule="mgwfbp", bucket_bytes=8e6, layer_profile="uniform16")),
+])
+def test_same_scenario_same_seed_identical_result(substrate, kw):
+    s = Scenario(**kw)
+    a = run_scenario(s, substrate)
+    b = run_scenario(s, substrate)
+    assert a.measured == b.measured
+    assert a.predicted == b.predicted
+    for k in a.series:
+        np.testing.assert_array_equal(a.series[k], b.series[k])
+
+
+def test_different_seed_different_result():
+    s = Scenario(sync="bsp", steps=30, n_workers=4)
+    a = run_scenario(s, "training")
+    b = run_scenario(s.replace(seed=1), "training")
+    assert a.measured["final_loss"] != b.measured["final_loss"]
+
+
+# ---------------------------------------------------------------------------
+# replica vmapping
+# ---------------------------------------------------------------------------
+
+
+def test_vmappable_predicate():
+    assert _vmappable(Scenario(sync="bsp"))
+    assert _vmappable(Scenario(sync="local"))
+    assert _vmappable(Scenario(sync="bsp", arch="gossip"))
+    assert not _vmappable(Scenario(sync="asp"))
+    assert not _vmappable(Scenario(compressor="qsgd"))
+
+
+def test_vmapped_matches_reference_simulator():
+    from repro.core.simulate import PROBLEMS, simulate_training
+
+    s = Scenario(sync="local", local_steps=4, steps=40, n_workers=4, lr=0.02)
+    vm = _simulate_training_vmapped(s, [0])[0]
+    problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
+    ref = simulate_training(to_sim_cfg(s), problem=problem)
+    np.testing.assert_allclose(vm["loss"], ref["loss"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(vm["bits"], ref["bits"])
+
+
+def test_replicas_vectorize_and_aggregate():
+    s = Scenario(sync="bsp", steps=30, n_workers=4)
+    res = run_scenario(s, "training", replicas=3)
+    assert res.replicas == 3
+    assert res.series["loss"].shape == (3, 30)
+    assert "final_loss_std" in res.measured
+    # replica 0 of the batch equals the single-seed run
+    single = run_scenario(s, "training", replicas=1)
+    np.testing.assert_allclose(res.series["loss"][0], single.series["loss"][0],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# golden relations (paper Table II / §III)
+# ---------------------------------------------------------------------------
+
+
+def test_golden_bsp_ring_beats_congested_ps():
+    base = dict(sync="bsp", n_workers=16, steps=60)
+    ring = run_scenario(Scenario(arch="allreduce", allreduce_alg="ring", **base), "timeline")
+    ps = run_scenario(Scenario(arch="ps", ps_congested=True, **base), "timeline")
+    assert ring.measured["iter_time"] < ps.measured["iter_time"]
+    # the cost model predicts the same ordering
+    assert ring.predicted["iter_time"] < ps.predicted["iter_time"]
+
+
+def test_golden_local_sgd_moves_fewer_bytes_than_bsp():
+    base = dict(arch="allreduce", n_workers=8, steps=64)
+    bsp = run_scenario(Scenario(sync="bsp", **base), "timeline")
+    loc = run_scenario(Scenario(sync="local", local_steps=8, **base), "timeline")
+    assert loc.measured["bytes_per_worker"] < bsp.measured["bytes_per_worker"]
+    # H=8 with steps divisible by 8 -> exactly 8x fewer sync rounds
+    np.testing.assert_allclose(
+        bsp.measured["bytes_per_worker"] / loc.measured["bytes_per_worker"], 8.0)
+
+
+def test_timeline_bytes_match_costmodel_prediction():
+    s = Scenario(sync="bsp", arch="allreduce", n_workers=8, steps=50)
+    res = run_scenario(s, "timeline")
+    np.testing.assert_allclose(res.measured["bytes_per_worker"],
+                               res.predicted["bytes_per_worker"])
+
+
+def test_compressed_wire_estimate():
+    dense = Scenario(msg_bytes=4e6)
+    qsgd = dense.replace(compressor="qsgd", compressor_kwargs={"levels": 16})
+    eff = estimated_wire_bytes(qsgd)
+    assert eff < estimated_wire_bytes(dense) / 5  # ~5 bits vs 32 bits
+
+
+# ---------------------------------------------------------------------------
+# CLI + tables
+# ---------------------------------------------------------------------------
+
+
+def test_parse_grid_same_compressor_two_kwarg_sets():
+    scenarios = parse_grid("compressor=qsgd:levels=4,qsgd:levels=16")
+    assert len(scenarios) == 2
+    assert sorted(s.kwargs_dict["levels"] for s in scenarios) == [4, 16]
+
+
+def test_grid_kwargs_list_is_an_axis():
+    scenarios = grid(compressor="qsgd",
+                     compressor_kwargs=[{"levels": 4}, {"levels": 16}])
+    assert len(scenarios) == 2
+    assert all(s.make_compressor() is not None for s in scenarios)
+
+
+def test_parse_grid_with_compressor_kwargs():
+    scenarios = parse_grid("sync=bsp,local compressor=none,topk:ratio=0.05")
+    assert len(scenarios) == 4
+    topks = [s for s in scenarios if s.compressor == "topk"]
+    assert all(s.kwargs_dict == {"ratio": 0.05} for s in topks)
+    nones = [s for s in scenarios if s.compressor is None]
+    assert all(s.compressor_kwargs == () for s in nones)
+
+
+def test_cli_sweep_emits_table(capsys, tmp_path):
+    out = tmp_path / "table.md"
+    rc = cli_main([
+        "--grid", "sync=bsp,local arch=ps,allreduce compressor=none,qsgd:levels=16",
+        "--steps", "24", "--workers", "4", "--out", str(out),
+    ])
+    assert rc == 0
+    text = out.read_text()
+    assert text.count("\n|") >= 8 + 2  # 8 scenario rows + header + rule
+    assert "cost-model prediction" in text
+    captured = capsys.readouterr()
+    assert "bsp/ps/none/wfbp" in captured.out
+
+
+def test_format_csv_roundtrip():
+    res = run_scenarios(expand(None, sync=["bsp", "local"], steps=[24], n_workers=[4]),
+                        "timeline")
+    csv = format_csv(res)
+    lines = csv.strip().split("\n")
+    assert len(lines) == 3
+    assert lines[0].startswith("tag,")
+    md = format_table(res)
+    rule_lines = [l for l in md.split("\n") if l.startswith("|---")]
+    assert len(rule_lines) == 1  # one header rule

@@ -9,7 +9,8 @@ from tests.helpers import run_subprocess_devices
 
 SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.compat import AxisType, make_mesh, shard_map
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.launch.mesh import make_test_mesh
@@ -34,10 +35,10 @@ for mode in ("baseline", "seqpar"):
     baxes, saxes = SP.batch_sharding_plan(mesh, shape)
     specs = tree_specs(build_defs(cfg, make_plan(cfg, 4)))
     bsp = {"tokens": P(("data",))}
-    pf = jax.jit(jax.shard_map(lambda p,b: T.prefill(cfg,p,b,ax), mesh=mesh,
+    pf = jax.jit(shard_map(lambda p,b: T.prefill(cfg,p,b,ax), mesh=mesh,
                  in_specs=(specs,bsp), out_specs=(P(baxes),cps), check_vma=False))
     last, cache = pf(params, {"tokens": toks[:, :S]})
-    df = jax.jit(jax.shard_map(
+    df = jax.jit(shard_map(
         lambda p,c,t: T.decode_step(cfg,p,c,t,ax,seq_axes=saxes,max_seq=S),
         mesh=mesh, in_specs=(specs,cps,P(baxes)), out_specs=(P(baxes),cps),
         check_vma=False))

@@ -9,7 +9,8 @@ from tests.helpers import run_subprocess_devices
 
 SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro.compat import AxisType, make_mesh, shard_map
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.sharding import AxisCtx, make_plan, tree_specs
@@ -58,9 +59,9 @@ def check(name, extra=None):
 
     results = []
     for dshape, mshape in (((1,1),(1,)), ((1, MSIZE), (MSIZE,))):
-        mesh = jax.make_mesh((dshape[0], dshape[1]), ("data","model"),
+        mesh = make_mesh((dshape[0], dshape[1]), ("data","model"),
                              axis_types=(AxisType.Auto,)*2)
-        f = jax.jit(jax.shard_map(lossgrad, mesh=mesh, in_specs=(specs, bsp),
+        f = jax.jit(shard_map(lossgrad, mesh=mesh, in_specs=(specs, bsp),
                                   out_specs=(P(), P()), check_vma=False))
         l, gn = f(params, batch)
         results.append((float(l), float(gn)))
