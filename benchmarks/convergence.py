@@ -1,28 +1,42 @@
 """Paper §VIII / Table IV convergence columns: empirical convergence vs
 communication bits for the taxonomy cells (BSP/SSP/ASP/Local x PS/gossip x
 none/quant/spars) on the strongly-convex testbed, plus O(1/T) rate fits —
-declared as scenarios and executed by the experiments engine."""
+declared as scenarios and executed by the experiments engine.  Every cell
+(compressed, EF, stale, gossip alike) runs through the jitted scan engine;
+the last row records its wall-clock speedup over the Python-loop reference
+(also written to BENCH_convergence.json by the sweep CLI's --emit-json)."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import Row
-from repro.experiments import Scenario, run_scenario, run_scenarios
+from repro.experiments import (
+    Scenario,
+    measure_engine_speedup,
+    run_scenario,
+    run_scenarios,
+)
 
 BASE = dict(n_workers=8, steps=400, lr=0.02, grad_noise=0.05, seed=0)
 
 CELLS = [
     Scenario(sync="bsp", **BASE),
     Scenario(sync="bsp", compressor="qsgd", compressor_kwargs={"levels": 16}, **BASE),
+    Scenario(sync="bsp", compressor="qsgd_kernel", error_feedback=True, **BASE),
     Scenario(sync="bsp", compressor="topk", compressor_kwargs={"ratio": 0.05},
              error_feedback=True, **BASE),
+    Scenario(sync="bsp", compressor="signsgd_packed", error_feedback=True,
+             **{**BASE, "lr": 0.005}),
     Scenario(sync="ssp", staleness=4, arch="ps", **BASE),
     Scenario(sync="asp", staleness=4, arch="ps", **BASE),
+    Scenario(sync="asp", staleness=4, arch="ps", compressor="terngrad", **BASE),
     Scenario(sync="local", local_steps=8, **BASE),
     Scenario(sync="local", local_steps=8, compressor="qsgd",
              compressor_kwargs={"levels": 16}, **BASE),
     Scenario(sync="bsp", arch="gossip", **BASE),
+    Scenario(sync="bsp", arch="gossip", compressor="topk",
+             compressor_kwargs={"ratio": 0.1}, error_feedback=True, **BASE),
 ]
 
 
@@ -51,4 +65,13 @@ def run() -> list[Row]:
     y = np.maximum(loss[40:300] - floor, 1e-9)
     p = -np.polyfit(np.log(t), np.log(y), 1)[0]
     rows.append(Row("convergence/rate_exponent_bsp", 0.0, f"{p:.2f}"))
+
+    # scan-engine speedup over the Python-loop reference (perf trajectory)
+    sp = measure_engine_speedup()
+    rows.append(Row(
+        "convergence/engine_speedup", sp["engine_s_warm"] * 1e6,
+        f"{sp['speedup_warm']:.0f}x warm / {sp['speedup_cold']:.1f}x cold "
+        f"vs reference ({sp['reference_s']:.1f}s) on {sp['cell']}",
+    ))
+    assert sp["speedup_warm"] >= 10.0, sp
     return rows

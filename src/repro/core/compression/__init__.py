@@ -1,6 +1,8 @@
 from repro.core.compression.base import (  # noqa: F401
     Compressed,
     Compressor,
+    compress_decompress,
+    compress_decompress_ef,
     get_compressor,
     register,
 )

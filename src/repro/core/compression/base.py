@@ -44,6 +44,45 @@ class Compressor(Protocol):
 
     def wire_bits(self, n: int) -> float: ...
 
+    # Optional scan/vmap fast paths (see helpers below). Every implementation
+    # must keep STATIC shapes as a function of x.shape only, so the call can
+    # sit inside jit / vmap-over-workers / lax.scan without retracing:
+    #
+    #   compress_decompress(key, x) -> x_hat            (= decompress(compress))
+    #   compress_decompress_ef(key, g, e) -> (x_hat, e') (fused error feedback)
+
+
+def compress_decompress(comp, key: jax.Array, x: jax.Array) -> jax.Array:
+    """Static-shape compress->decompress roundtrip of one flat vector.
+
+    Dispatches to the compressor's own ``compress_decompress`` fast path when
+    it defines one (e.g. a fused kernel or a payload-free dense shortcut) and
+    otherwise composes ``decompress(compress(key, x))``.  This is the hook the
+    jitted scan engine (:func:`repro.core.simulate.simulate_training`) vmaps
+    over workers — it never materializes the :class:`Compressed` wrapper on
+    the host, so any registry compressor is scan-safe through it.
+    """
+    fast = getattr(comp, "compress_decompress", None)
+    if fast is not None:
+        return fast(key, x)
+    return comp.decompress(comp.compress(key, x))
+
+
+def compress_decompress_ef(comp, key: jax.Array, g: jax.Array, e: jax.Array):
+    """Error-feedback roundtrip: returns ``(x_hat, e_new)`` for ``a = g + e``.
+
+    Compressors may fuse the three passes (accumulate, quantize, residual)
+    into one kernel by defining ``compress_decompress_ef`` (the Pallas
+    ``qsgd_ef_fused`` path); the fallback composes the generic EF update
+    ``e' = a - C(a)`` from :func:`compress_decompress`.
+    """
+    fused = getattr(comp, "compress_decompress_ef", None)
+    if fused is not None:
+        return fused(key, g, e)
+    a = g + e
+    out = compress_decompress(comp, key, a)
+    return out, a - out
+
 
 _REGISTRY: dict[str, Callable[..., Any]] = {}
 

@@ -31,7 +31,13 @@ class QSGDKernel:
         return Compressed({"code": codes, "norm": norm}, x.size)
 
     def decompress(self, c) -> jax.Array:
-        return c.payload["code"].astype(f32) / self.levels * c.payload["norm"][0]
+        return ops.qsgd_dequantize(c.payload["code"], c.payload["norm"], levels=self.levels)
+
+    def compress_decompress_ef(self, key, g, e):
+        """Fused EF+quantize (one Pallas pass instead of three dense ones)."""
+        u = jax.random.uniform(key, g.shape)
+        codes, norm, e_new = ops.qsgd_ef_fused(g, e, u, levels=self.levels)
+        return ops.qsgd_dequantize(codes, norm, levels=self.levels), e_new
 
     def wire_bits(self, n) -> float:
         import math

@@ -11,6 +11,10 @@ Top-k-style methods carry (values, int32 indices) payloads with *static* k —
 the TPU wire format (DESIGN.md §6).  Threshold methods cannot have static
 payload shapes; they transmit a dense masked tensor in simulation and
 account wire bits analytically from the realized sparsity (documented).
+All compress/decompress pairs here are static-shape pure functions, so the
+generic ``compress_decompress`` roundtrip (repro.core.compression.base) is
+scan/vmap-safe for every one of them — no per-class fast path needed (the
+unused payload fields are dead-code-eliminated under jit).
 """
 
 from __future__ import annotations

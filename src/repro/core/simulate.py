@@ -9,10 +9,14 @@ Two engines:
    Table II qualitative matrix quantitatively.
 
 2. :func:`simulate_training` — an *exact* (not event-driven) multi-worker
-   SGD simulator: n virtual workers vectorized with vmap, supporting
-   stale/asynchronous updates via gradient delay buffers, all four sync
-   schemes, PS vs gossip topologies, and any compressor (+EF).  Used for
-   the convergence-rate benchmarks (paper §VIII, Table IV) on convex
+   SGD simulator: one jitted ``lax.scan`` over steps whose carry holds
+   ``(X, ef, delay_buf, key, total_bits)``, vmapped over workers inside the
+   step and over replica seeds outside it (:func:`simulate_training_batch`).
+   Every sync scheme (bsp/local/ssp/asp/gossip) and every registered
+   compressor (+EF, including the fused Pallas EF kernel) runs in the one
+   compiled scan; :func:`simulate_training_reference` keeps the original
+   per-step Python loop as the equivalence baseline.  Used for the
+   convergence-rate benchmarks (paper §VIII, Table IV) on convex
    (quadratic/logistic) and non-convex (small MLP) objectives — this is the
    substrate for validating the survey's convergence claims empirically.
 
@@ -111,27 +115,38 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
     round_bytes = _comm_bytes(cfg)
 
     if cfg.sync == "bsp":
-        for it in range(T):
-            t_comp = t + compute[:, it]
-            barrier = t_comp.max()
-            c = _comm_time(cfg, concurrent=n)
-            t = np.full(n, barrier + c)
-            comm_total += (t - t_comp)
-            bytes_per_worker += round_bytes
-            finish[:, it] = t
-            stale_samples.append(0.0)
+        # Vectorized: after every barrier all workers share one clock, so the
+        # iteration time is the per-iteration max compute + comm — a single
+        # cumulative sum over iterations instead of the per-step Python loop.
+        c = _comm_time(cfg, concurrent=n)
+        t_end = np.cumsum(compute.max(axis=0) + c)  # (T,) barrier+comm ends
+        finish[:] = t_end[None, :]
+        t_prev = np.concatenate([[0.0], t_end[:-1]])
+        comm_total = (t_end[None, :] - (t_prev[None, :] + compute)).sum(axis=1)
+        bytes_per_worker = T * round_bytes
+        stale_samples = [0.0]
     elif cfg.sync == "local":
-        for it in range(T):
-            t = t + compute[:, it]
-            finish[:, it] = t
-            if (it + 1) % cfg.local_steps == 0:
-                barrier = t.max()
-                c = _comm_time(cfg, concurrent=n)
-                comm_total += barrier + c - t
-                bytes_per_worker += round_bytes
-                t = np.full(n, barrier + c)
-                finish[:, it] = t
-            stale_samples.append(0.0)
+        # Vectorized per H-step segment: workers run free inside a segment
+        # (within-segment cumsum), then barrier on the segment max.
+        H = cfg.local_steps
+        c = _comm_time(cfg, concurrent=n)
+        K, rem = divmod(T, H)
+        seg_end = 0.0
+        if K:
+            seg_cum = compute[:, : K * H].reshape(n, K, H).cumsum(axis=2)
+            seg_tot = seg_cum[:, :, -1]  # (n, K) per-worker segment compute
+            incr = seg_tot.max(axis=0) + c  # (K,) barrier-to-barrier time
+            seg_start = np.concatenate([[0.0], np.cumsum(incr)[:-1]])
+            fin = seg_start[None, :, None] + seg_cum  # (n, K, H)
+            sync_end = seg_start + incr
+            fin[:, :, -1] = sync_end[None, :]
+            finish[:, : K * H] = fin.reshape(n, K * H)
+            comm_total = (sync_end[None, :] - (seg_start[None, :] + seg_tot)).sum(axis=1)
+            bytes_per_worker = K * round_bytes
+            seg_end = sync_end[-1]
+        if rem:  # trailing partial segment never reaches a sync point
+            finish[:, K * H :] = seg_end + compute[:, K * H :].cumsum(axis=1)
+        stale_samples = [0.0]
     else:  # ssp / asp: event-driven per worker
         # each worker proceeds; SSP blocks if ahead of slowest by > s
         c_one = _comm_time(cfg, concurrent=max(1, n // 4))  # partial congestion
@@ -243,12 +258,173 @@ PROBLEMS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# 2a. The jitted scan engine (every sync scheme x every compressor).
+# ---------------------------------------------------------------------------
+
+
+def _analytic_round_bits(comp, dim: int, n: int) -> float:
+    """Bits ALL workers put on the wire in one communication round: 32/elem
+    dense, the compressor's analytic ``wire_bits`` otherwise.  Data-dependent
+    sizes (threshold sparsifiers return NaN) charge 0 here — their realized
+    nnz is a benchmark-side measurement, not a per-step engine quantity."""
+    if comp is None:
+        return 32.0 * dim * n
+    wb = comp.wire_bits(dim)
+    return 0.0 if wb != wb else wb * n  # NaN -> 0
+
+
+def _build_replica_fn(cfg: SimCfg, problem):
+    """One replica = one jitted ``lax.scan`` over steps; workers are vmapped
+    *inside* the step (gradients and compression), replica seeds are vmapped
+    *outside* by the caller.  The carry is ``(X, ef, delay_buf, key,
+    total_bits)`` so stale schemes and error feedback live entirely on
+    device — no per-step host sync, no per-worker Python loop."""
+    from repro.core.compression.base import (
+        compress_decompress,
+        compress_decompress_ef,
+    )
+
+    grad_fn, loss_fn, x0, x_star = problem
+    n, dim = cfg.n_workers, x0.size
+    comp = cfg.compressor
+    sync, lr = cfg.sync, cfg.lr
+    if sync not in ("bsp", "local", "ssp", "asp", "gossip"):
+        raise ValueError(sync)
+
+    W = None
+    if sync == "gossip":
+        from repro.core.gossip import ring_mixing_matrix
+
+        W = jnp.asarray(ring_mixing_matrix(n, cfg.gossip_w), f32)
+
+    round_bits = _analytic_round_bits(comp, dim, n)
+    # Local SGD communicates only at sync steps (the parameter average); every
+    # other scheme pays one round per step.
+    step_bits = 0.0 if sync == "local" else round_bits
+
+    widx = jnp.arange(n)
+    # SSP: workers alternate being ahead — worker i's gradient is delayed
+    # i % (s+1) steps, read from the rolled delay line with one gather.
+    d_idx = jnp.asarray(np.arange(n) % (cfg.staleness + 1))
+
+    def apply_compression(ckeys, G, ef):
+        if comp is None:
+            return G, ef
+        if cfg.error_feedback:
+            out, ef2 = jax.vmap(
+                lambda k, g, e: compress_decompress_ef(comp, k, g, e)
+            )(ckeys, G, ef)
+            return out, ef2
+        out = jax.vmap(lambda k, g: compress_decompress(comp, k, g))(ckeys, G)
+        return out, ef
+
+    def step(carry, t):
+        X, ef, delay_buf, key, total_bits = carry
+        key, k1, k2 = jax.random.split(key, 3)
+        gkeys = jax.random.split(k1, n)
+        ckeys = jax.random.split(k2, n)
+        G = jax.vmap(grad_fn)(X, widx, gkeys)
+
+        if sync == "gossip":
+            Ghat, ef = apply_compression(ckeys, G, ef)
+            X = W @ (X - lr * Ghat)
+            total_bits = total_bits + step_bits
+        else:
+            if sync == "asp":
+                delay_buf = jnp.roll(delay_buf, 1, axis=0).at[0].set(G)
+                G_eff = delay_buf[-1]  # the gradient `staleness` steps old
+            elif sync == "ssp":
+                delay_buf = jnp.roll(delay_buf, 1, axis=0).at[0].set(G)
+                G_eff = delay_buf[d_idx, widx]
+            else:
+                G_eff = G
+            Ghat, ef = apply_compression(ckeys, G_eff, ef)
+            if sync == "local":
+                X = X - lr * Ghat
+                is_sync = (t + 1) % cfg.local_steps == 0
+                X = jnp.where(
+                    is_sync,
+                    jnp.broadcast_to(jnp.mean(X, axis=0)[None], X.shape),
+                    X,
+                )
+                total_bits = total_bits + jnp.where(is_sync, round_bits, 0.0)
+            else:  # bsp / ssp / asp: exact mean of the (effective) gradients
+                X = X - lr * jnp.mean(Ghat, axis=0)[None, :]
+                total_bits = total_bits + step_bits
+        xbar = jnp.mean(X, axis=0)
+        out = (
+            loss_fn(xbar),
+            jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1)),
+            total_bits,
+        )
+        return (X, ef, delay_buf, key, total_bits), out
+
+    def one_replica(seed_key):
+        carry0 = (
+            jnp.tile(x0[None], (n, 1)),
+            jnp.zeros((n, dim), f32),
+            jnp.zeros((cfg.staleness + 1, n, dim), f32),
+            seed_key,
+            jnp.zeros((), f32),
+        )
+        (Xf, *_), (losses, cons, bits) = jax.lax.scan(
+            step, carry0, jnp.arange(cfg.steps)
+        )
+        return losses, cons, bits, jnp.linalg.norm(jnp.mean(Xf, 0) - x_star)
+
+    return one_replica
+
+
+def simulate_training_batch(
+    cfg: SimCfg, problem=None, *, seeds: list[int] | None = None
+) -> list[dict[str, np.ndarray]]:
+    """Run every replica seed of one taxonomy cell in a single compiled
+    program: ``jit(vmap(scan))`` over the seed axis.  The per-seed result
+    dicts match :func:`simulate_training_reference` within float tolerance
+    (property-tested for every sync scheme x registered compressor x EF).
+
+    Custom ``problem`` tuples must provide a worker-vmappable ``grad``
+    (traced worker index) — both built-in problems do.
+    """
+    problem = problem or PROBLEMS["quadratic"](n_workers=cfg.n_workers, seed=cfg.seed)
+    seeds = [cfg.seed] if seeds is None else list(seeds)
+    one_replica = _build_replica_fn(cfg, problem)
+    keys = jnp.stack([jax.random.key(sd) for sd in seeds])
+    losses, cons, bits, errs = jax.jit(jax.vmap(one_replica))(keys)
+    return [
+        {
+            "loss": np.asarray(losses[r]),
+            "consensus": np.asarray(cons[r]),
+            "bits": np.asarray(bits[r], dtype=np.float64),
+            "x_star_err": float(errs[r]),
+        }
+        for r in range(len(seeds))
+    ]
+
+
 def simulate_training(cfg: SimCfg, problem=None) -> dict[str, np.ndarray]:
     """Exact simulation of n workers under the chosen sync/topology/compressor.
 
     Returns {"loss": (steps,), "consensus": (steps,), "bits": (steps,)} —
     loss of the (mean) model, worker disagreement, cumulative upload bits.
+
+    Runs on the jitted scan engine; :func:`simulate_training_reference` is the
+    step-by-step Python loop it is equivalence-tested against.
     """
+    return simulate_training_batch(cfg, problem)[0]
+
+
+# ---------------------------------------------------------------------------
+# 2b. Reference implementation (Python loop, kept for equivalence tests).
+# ---------------------------------------------------------------------------
+
+
+def simulate_training_reference(cfg: SimCfg, problem=None) -> dict[str, np.ndarray]:
+    """The original per-step Python-loop simulator — O(steps x workers)
+    dispatches and a host sync per step.  Kept as the semantic reference the
+    scan engine is tested against (tests/test_scan_engine.py) and as the
+    baseline for the engine-speedup benchmark."""
     grad_fn, loss_fn, x0, x_star = problem or quadratic_problem(n_workers=cfg.n_workers, seed=cfg.seed)
     n = cfg.n_workers
     dim = x0.size

@@ -22,6 +22,8 @@ from repro.experiments.scenario import (  # noqa: F401
 from repro.experiments.runner import (  # noqa: F401
     ScenarioResult,
     estimated_wire_bytes,
+    measure_engine_speedup,
+    roofline_row,
     rounds_per_iter,
     run_scenario,
     run_scenarios,

@@ -11,15 +11,23 @@ Scenario field). Compressor values may carry kwargs after colons:
 dropped and reported on stderr. The default grid sweeps the paper's
 sync x architecture x compression matrix (16 valid cells) and prints a
 Table II-style comparison of measured vs cost-model-predicted time/bytes.
+
+``--substrate roofline`` emits the analytic per-cell dry-run prediction
+(compute/memory/collective roofline terms); ``--emit-json PATH`` records
+measured metrics, predictions, relative error, and sweep wall-clock — on the
+training substrate it also benchmarks the scan engine against the
+Python-loop reference (see BENCH_convergence.json at the repo root).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
+import time
 
-from repro.experiments.runner import run_scenarios
+from repro.experiments.runner import measure_engine_speedup, run_scenarios
 from repro.experiments.scenario import Scenario, expand, grid
 from repro.experiments.tables import format_csv, format_table
 
@@ -92,10 +100,11 @@ def main(argv=None) -> int:
     )
     p.add_argument("--grid", default=DEFAULT_GRID, help=f"axis spec (default: {DEFAULT_GRID!r})")
     p.add_argument("--substrate", default="timeline",
-                   choices=("timeline", "training", "schedule"))
+                   choices=("timeline", "training", "schedule", "roofline"))
     p.add_argument("--workers", type=int, default=16)
     p.add_argument("--steps", type=int, default=120)
-    p.add_argument("--replicas", type=int, default=1, help="seeds per scenario (vmapped where dense)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="seeds per scenario (every cell vmaps them in one scan)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--lr", type=float, default=0.05)
     p.add_argument("--straggler", type=float, default=1.0,
@@ -105,6 +114,15 @@ def main(argv=None) -> int:
     p.add_argument("--beta", type=float, default=1e-9, help="link s/byte")
     p.add_argument("--format", default="table", choices=("table", "csv"))
     p.add_argument("--out", default="", help="write the table here as well as stdout")
+    p.add_argument("--emit-json", default="", metavar="PATH",
+                   help="write a perf-tracking JSON record: per-cell measured "
+                        "metrics, cost-model predictions, relative error, sweep "
+                        "wall-clock, and (training substrate) the scan-engine "
+                        "vs Python-loop-reference speedup")
+    p.add_argument("--no-speedup", action="store_true",
+                   help="skip the engine-vs-reference speedup benchmark in "
+                        "--emit-json (it runs the 300-step reference loop, "
+                        "~10s+ — too heavy for smoke checks)")
     args = p.parse_args(argv)
 
     base = dict(
@@ -129,7 +147,9 @@ def main(argv=None) -> int:
     print(f"# sweeping {len(scenarios)} scenarios on the {args.substrate} substrate "
           f"({len(dropped)} invalid cells dropped)", file=sys.stderr)
 
+    t0 = time.perf_counter()
     results = run_scenarios(scenarios, args.substrate, replicas=args.replicas)
+    sweep_s = time.perf_counter() - t0
     title = (f"{args.substrate} sweep: {len(results)} cells, "
              f"n={args.workers}, steps={args.steps}")
     text = format_table(results, title=title) if args.format == "table" else format_csv(results)
@@ -137,7 +157,41 @@ def main(argv=None) -> int:
     if args.out:
         with open(args.out, "w") as f:
             f.write(text)
+    if args.emit_json:
+        record = emit_json_record(results, sweep_s)
+        if args.substrate == "training" and not args.no_speedup:
+            record["engine_speedup"] = measure_engine_speedup()
+        with open(args.emit_json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {args.emit_json}", file=sys.stderr)
     return 0
+
+
+def emit_json_record(results, sweep_s: float) -> dict:
+    """Measured vs predicted per cell (+ relative error on shared keys) and
+    the sweep wall-clock — the across-PR perf/accuracy trajectory record."""
+    cells = []
+    for r in results:
+        rel_err = {
+            k: abs(r.measured[k] - r.predicted[k]) / max(abs(r.predicted[k]), 1e-30)
+            for k in r.measured
+            if k in r.predicted
+            and isinstance(r.measured[k], (int, float))
+            and isinstance(r.predicted[k], (int, float))
+        }
+        cells.append({
+            "tag": r.tag,
+            "replicas": r.replicas,
+            "measured": {k: v for k, v in r.measured.items()},
+            "predicted": {k: v for k, v in r.predicted.items()},
+            "rel_err": rel_err,
+        })
+    return {
+        "substrate": results[0].substrate if results else "",
+        "n_cells": len(results),
+        "sweep_wall_clock_s": sweep_s,
+        "cells": cells,
+    }
 
 
 if __name__ == "__main__":

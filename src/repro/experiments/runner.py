@@ -10,12 +10,18 @@ Substrates:
 
 * ``timeline``  — :func:`repro.core.simulate.simulate_timeline` (Fig. 4 /
   Table II: throughput, staleness, idle, wire bytes under stragglers);
-* ``training``  — :func:`repro.core.simulate.simulate_training` (§VIII
-  convergence: loss / consensus / upload bits). Dense (uncompressed)
-  scenarios that share one problem run all replica seeds in ONE vmapped
-  ``lax.scan`` — shapes agree, so replicas vectorize instead of looping;
+* ``training``  — :func:`repro.core.simulate.simulate_training_batch` (§VIII
+  convergence: loss / consensus / upload bits). EVERY taxonomy cell — all
+  sync schemes, all registered compressors, EF on/off — runs its replica
+  seeds in ONE jitted ``lax.scan`` vmapped over the seed axis; nothing
+  falls back to the per-step Python loop
+  (:func:`repro.core.simulate.simulate_training_reference` survives only as
+  the equivalence/benchmark baseline);
 * ``schedule``  — :func:`repro.core.schedule.simulate_schedule` (§VII
-  WFBP / MG-WFBP iteration-time model).
+  WFBP / MG-WFBP iteration-time model);
+* ``roofline``  — analytic per-scenario dry-run prediction reusing the
+  roofline terms of :mod:`repro.launch.roofline` (no mesh, no compile):
+  compute / HBM / collective seconds per iteration and the bottleneck.
 
 The ``trainer`` substrate (real mesh execution of a Scenario through
 ``repro.train``) lives in :mod:`repro.experiments.trainer_substrate` because
@@ -44,7 +50,8 @@ from repro.core.simulate import (
     SimCfg,
     TimelineCfg,
     simulate_timeline,
-    simulate_training,
+    simulate_training_batch,
+    simulate_training_reference,
 )
 from repro.experiments.scenario import Scenario
 
@@ -166,6 +173,12 @@ def predict(s: Scenario, substrate: str) -> dict[str, float]:
             "no_overlap_time": bwd + per_layer,
             "full_overlap_bound": max(bwd, per_layer),
         }
+    if substrate == "roofline":
+        # alpha-beta counterpart of the roofline terms: serial compute+comm.
+        return {
+            "iter_time": s.compute_time + comm_per_iter,
+            "comm_frac": comm_per_iter / (s.compute_time + comm_per_iter),
+        }
     raise ValueError(substrate)
 
 
@@ -253,82 +266,101 @@ def to_sim_cfg(s: Scenario, seed: int | None = None) -> SimCfg:
 
 
 # ---------------------------------------------------------------------------
-# Dense-scenario vmapped training fast path.
+# Roofline substrate: analytic dry-run prediction per scenario (no mesh).
 # ---------------------------------------------------------------------------
 
 
-def _vmappable(s: Scenario) -> bool:
-    """Replica seeds vectorize when the per-step update is a pure jax
-    function of (X, key): dense gradients, no delay lines."""
-    if s.compressor is not None:
-        return False
-    if s.arch == "gossip":
-        return s.sync == "bsp"
-    return s.sync in ("bsp", "local")
+def _hbm_passes(s: Scenario) -> float:
+    """Gradient-sized HBM passes per iteration of the compression pipeline
+    (the qsgd_ef kernel analysis, repro/kernels/qsgd_ef.py): dense SGD apply
+    is 3 passes (read g, read x, write x); an unfused compress+EF adds 8, an
+    unfused compress adds 2.5, and the fused EF kernel adds 4.25."""
+    passes = 3.0
+    if s.compressor is None:
+        return passes
+    comp = s.make_compressor()
+    if s.error_feedback:
+        return passes + (4.25 if hasattr(comp, "compress_decompress_ef") else 8.0)
+    return passes + 2.5
 
 
-def _simulate_training_vmapped(s: Scenario, seeds: list[int]) -> list[dict[str, np.ndarray]]:
-    """All replica seeds in one jitted lax.scan, vmapped over the seed axis.
+def roofline_row(s: Scenario) -> dict[str, Any]:
+    """Per-scenario roofline terms via :mod:`repro.launch.roofline` — the
+    dry-run prediction the ROADMAP asked for, built from the scenario's
+    analytic byte/flop model instead of a compiled artifact (no mesh needed).
+    The declared ``compute_time`` is inverted to FLOPs at chip peak so the
+    shared :class:`Roofline` term algebra applies unchanged."""
+    from repro.launch import roofline as RL
 
-    Mirrors :func:`simulate_training`'s dense bsp/local/gossip dynamics and
-    bit accounting; only the (identical-shape) RNG keys differ per replica.
-    """
+    eff = estimated_wire_bytes(s)
+    rl = RL.Roofline(
+        arch=s.arch,
+        shape=s.tag(),
+        mesh=f"n{s.n_workers}",
+        flops=s.compute_time * RL.PEAK_FLOPS,
+        hbm_bytes=_hbm_passes(s) * s.msg_bytes,
+        coll_bytes=_round_wire_bytes(s, eff) * rounds_per_iter(s),
+        coll_bytes_hlo=0.0,
+        coll_by_kind={},
+    )
+    return {
+        "t_compute": rl.t_compute,
+        "t_memory": rl.t_memory,
+        "t_collective": rl.t_collective,
+        "iter_time_bound": max(rl.t_compute, rl.t_memory, rl.t_collective),
+        "bottleneck": rl.bottleneck,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Engine-vs-reference speedup measurement (perf trajectory across PRs).
+# ---------------------------------------------------------------------------
+
+#: the fixed perf-tracking cell: 8 workers, 300 steps, 3 replicas, qsgd+EF.
+REFERENCE_SPEEDUP_CELL = Scenario(
+    sync="bsp", n_workers=8, steps=300, lr=0.05,
+    compressor="qsgd", compressor_kwargs={"levels": 16}, error_feedback=True,
+)
+
+
+def measure_engine_speedup(s: Scenario = REFERENCE_SPEEDUP_CELL, *, replicas: int = 3) -> dict[str, float]:
+    """Wall-clock of the jitted scan engine vs the Python-loop reference on
+    one cell.  ``speedup_warm`` excludes the one-time jit compile (the repo's
+    ``benchmarks.common.time_fn`` convention); ``speedup_cold`` includes it."""
+    import time
+
     import jax
     import jax.numpy as jnp
 
-    grad_fn, loss_fn, x0, x_star = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
-    n, dim = s.n_workers, x0.size
-    gossip = s.arch == "gossip"
-    W = None
-    if gossip:
-        from repro.core.gossip import ring_mixing_matrix
+    from repro.core.simulate import _build_replica_fn
 
-        W = jnp.asarray(ring_mixing_matrix(n, 1.0 / 3.0), jnp.float32)
+    problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
+    seeds = [s.seed + r for r in range(replicas)]
+    cfg = to_sim_cfg(s)
 
-    widx = jnp.arange(n)
-
-    def step(carry, t):
-        X, key = carry
-        key, k1, _ = jax.random.split(key, 3)
-        gkeys = jax.random.split(k1, n)
-        G = jax.vmap(grad_fn)(X, widx, gkeys)
-        if gossip:
-            X = W @ (X - s.lr * G)
-            round_bits = 32.0 * dim * n
-        elif s.sync == "local":
-            X = X - s.lr * G
-            is_sync = (t + 1) % s.local_steps == 0
-            X = jnp.where(is_sync, jnp.tile(jnp.mean(X, axis=0)[None], (n, 1)), X)
-            round_bits = jnp.where(is_sync, 32.0 * dim * n, 0.0)
-        else:  # bsp
-            X = X - s.lr * jnp.mean(G, axis=0)[None, :]
-            round_bits = 32.0 * dim * n
-        xbar = jnp.mean(X, axis=0)
-        out = (
-            loss_fn(xbar),
-            jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1)),
-            round_bits,
-        )
-        return (X, key), out
-
-    def one_replica(seed_key):
-        X = jnp.tile(x0[None], (n, 1))
-        (Xf, _), (losses, cons, rbits) = jax.lax.scan(
-            step, (X, seed_key), jnp.arange(s.steps)
-        )
-        return losses, cons, jnp.cumsum(rbits), jnp.linalg.norm(jnp.mean(Xf, 0) - x_star)
-
+    fn = jax.jit(jax.vmap(_build_replica_fn(cfg, problem)))
     keys = jnp.stack([jax.random.key(sd) for sd in seeds])
-    losses, cons, bits, errs = jax.jit(jax.vmap(one_replica))(keys)
-    return [
-        {
-            "loss": np.asarray(losses[r]),
-            "consensus": np.asarray(cons[r]),
-            "bits": np.asarray(bits[r]),
-            "x_star_err": float(errs[r]),
-        }
-        for r in range(len(seeds))
-    ]
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(keys))
+    cold = time.perf_counter() - t0  # includes the one-time jit compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(keys))
+    warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for sd in seeds:
+        simulate_training_reference(to_sim_cfg(s, seed=sd), problem=problem)
+    ref = time.perf_counter() - t0
+    return {
+        "cell": s.tag(),
+        "replicas": replicas,
+        "steps": s.steps,
+        "engine_s_cold": cold,
+        "engine_s_warm": warm,
+        "reference_s": ref,
+        "speedup_cold": ref / cold,
+        "speedup_warm": ref / warm,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -357,11 +389,10 @@ def run_scenario(s: Scenario, substrate: str = "timeline", *, replicas: int = 1)
         return ScenarioResult(s, substrate, measured, pred, replicas=replicas)
 
     if substrate == "training":
-        if _vmappable(s):
-            outs = _simulate_training_vmapped(s, seeds)
-        else:
-            problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
-            outs = [simulate_training(to_sim_cfg(s, seed=sd), problem=problem) for sd in seeds]
+        # every cell — any sync scheme, any compressor, EF on/off — runs all
+        # replica seeds in one jitted scan (no Python-loop fallback).
+        problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
+        outs = simulate_training_batch(to_sim_cfg(s), problem, seeds=seeds)
         measured = {
             "final_loss": _agg([float(o["loss"][-1]) for o in outs]),
             "x_star_err": _agg([o["x_star_err"] for o in outs]),
@@ -390,6 +421,9 @@ def run_scenario(s: Scenario, substrate: str = "timeline", *, replicas: int = 1)
         )
         measured = {k: float(v) for k, v in r.items()}
         return ScenarioResult(s, substrate, measured, pred, replicas=1)
+
+    if substrate == "roofline":
+        return ScenarioResult(s, substrate, roofline_row(s), pred, replicas=1)
 
     if substrate == "trainer":
         from repro.experiments.trainer_substrate import run_trainer_scenario

@@ -26,7 +26,7 @@ from typing import Any, Iterable, Mapping
 SYNC_SCHEMES = ("bsp", "ssp", "asp", "local", "post_local")
 ARCHITECTURES = ("ps", "allreduce", "gossip")
 SCHEDULE_MODES = ("sequential", "wfbp", "mgwfbp")
-SUBSTRATES = ("timeline", "training", "schedule", "trainer")
+SUBSTRATES = ("timeline", "training", "schedule", "roofline", "trainer")
 
 #: sync schemes that only exist in the simulators (no single SPMD program
 #: can express bounded staleness / full asynchrony — repro.core.sync).

@@ -42,10 +42,20 @@ _COLUMNS = {
         ("KB/step", "wire_kb_per_step", None),
         ("sync_rounds", "sync_rounds", None),
     ),
+    "roofline": (
+        ("compute(ms)", "t_compute", None),
+        ("memory(ms)", "t_memory", None),
+        ("collective(ms)", "t_collective", None),
+        ("bound(ms)", "iter_time_bound", None),
+        ("bottleneck", "bottleneck", None),
+        ("alphabeta_iter(s)", None, "iter_time"),
+    ),
 }
 
 _SCALE = {"GB/worker": 1e-9, "iter_time(ms)": 1e3, "comm_time(ms)": 1e3,
-          "no_overlap(ms)": 1e3, "overlap_bound(ms)": 1e3}
+          "no_overlap(ms)": 1e3, "overlap_bound(ms)": 1e3,
+          "compute(ms)": 1e3, "memory(ms)": 1e3, "collective(ms)": 1e3,
+          "bound(ms)": 1e3}
 
 
 def _fmt(v) -> str:

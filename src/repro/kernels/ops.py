@@ -42,6 +42,12 @@ def qsgd_quantize(x: jax.Array, u: jax.Array, *, levels: int = 16) -> tuple[jax.
     return codes.reshape(-1)[:n], norm[None]
 
 
+@functools.partial(jax.jit, static_argnames=("levels",))
+def qsgd_dequantize(codes: jax.Array, norm: jax.Array, *, levels: int = 16) -> jax.Array:
+    """Inverse of qsgd_quantize / the codes half of qsgd_ef_fused."""
+    return codes.astype(f32) / levels * norm[0]
+
+
 @functools.partial(jax.jit, static_argnames=("levels", "decay"))
 def qsgd_ef_fused(g: jax.Array, e: jax.Array, u: jax.Array, *, levels: int = 16,
                   decay: float = 1.0):

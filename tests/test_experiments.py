@@ -6,9 +6,8 @@ import pytest
 
 from repro.experiments import Scenario, expand, grid, run_scenario, run_scenarios
 from repro.experiments.runner import (
-    _simulate_training_vmapped,
-    _vmappable,
     estimated_wire_bytes,
+    roofline_row,
     to_sim_cfg,
 )
 from repro.experiments.run import main as cli_main, parse_grid
@@ -110,31 +109,39 @@ def test_different_seed_different_result():
 
 
 # ---------------------------------------------------------------------------
-# replica vmapping
+# replica vmapping (every cell goes through the scan engine — no fallback)
 # ---------------------------------------------------------------------------
 
 
-def test_vmappable_predicate():
-    assert _vmappable(Scenario(sync="bsp"))
-    assert _vmappable(Scenario(sync="local"))
-    assert _vmappable(Scenario(sync="bsp", arch="gossip"))
-    assert not _vmappable(Scenario(sync="asp"))
-    assert not _vmappable(Scenario(compressor="qsgd"))
+def test_no_python_loop_fallback_in_runner():
+    """PR 1's dense-only `_vmappable` gate is gone: the runner routes every
+    training cell through the jitted scan engine."""
+    import repro.experiments.runner as runner_mod
+
+    assert not hasattr(runner_mod, "_vmappable")
+    assert not hasattr(runner_mod, "_simulate_training_vmapped")
 
 
-def test_vmapped_matches_reference_simulator():
-    from repro.core.simulate import PROBLEMS, simulate_training
+def test_engine_matches_reference_through_runner():
+    from repro.core.simulate import PROBLEMS, simulate_training_reference
 
     s = Scenario(sync="local", local_steps=4, steps=40, n_workers=4, lr=0.02)
-    vm = _simulate_training_vmapped(s, [0])[0]
+    vm = run_scenario(s, "training").series
     problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
-    ref = simulate_training(to_sim_cfg(s), problem=problem)
-    np.testing.assert_allclose(vm["loss"], ref["loss"], rtol=1e-4, atol=1e-4)
-    np.testing.assert_array_equal(vm["bits"], ref["bits"])
+    ref = simulate_training_reference(to_sim_cfg(s), problem=problem)
+    np.testing.assert_allclose(vm["loss"][0], ref["loss"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(vm["bits"][0], ref["bits"])
 
 
-def test_replicas_vectorize_and_aggregate():
-    s = Scenario(sync="bsp", steps=30, n_workers=4)
+@pytest.mark.parametrize("kw", [
+    dict(sync="bsp"),
+    dict(sync="asp", staleness=2, arch="ps", compressor="qsgd",
+         compressor_kwargs={"levels": 8}, error_feedback=True),
+    dict(sync="bsp", arch="gossip", compressor="topk",
+         compressor_kwargs={"ratio": 0.1}),
+], ids=["dense-bsp", "asp-qsgd-ef", "gossip-topk"])
+def test_replicas_vectorize_and_aggregate(kw):
+    s = Scenario(steps=30, n_workers=4, **kw)
     res = run_scenario(s, "training", replicas=3)
     assert res.replicas == 3
     assert res.series["loss"].shape == (3, 30)
@@ -143,6 +150,32 @@ def test_replicas_vectorize_and_aggregate():
     single = run_scenario(s, "training", replicas=1)
     np.testing.assert_allclose(res.series["loss"][0], single.series["loss"][0],
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# roofline substrate
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_substrate_rows():
+    s = Scenario(sync="bsp", n_workers=8, compute_time=1e-3)
+    res = run_scenario(s, "roofline")
+    for k in ("t_compute", "t_memory", "t_collective", "iter_time_bound"):
+        assert res.measured[k] >= 0
+    assert res.measured["bottleneck"] in ("compute", "memory", "collective")
+    assert res.predicted["iter_time"] > 0
+    np.testing.assert_allclose(res.measured["t_compute"], 1e-3)
+
+
+def test_roofline_compression_shrinks_collective_term():
+    dense = roofline_row(Scenario(sync="bsp"))
+    comp = roofline_row(Scenario(sync="bsp", compressor="qsgd",
+                                 compressor_kwargs={"levels": 16}))
+    assert comp["t_collective"] < dense["t_collective"] / 5
+    # the fused EF kernel moves fewer HBM bytes than the unfused EF pipeline
+    fused = roofline_row(Scenario(compressor="qsgd_kernel", error_feedback=True))
+    unfused = roofline_row(Scenario(compressor="qsgd", error_feedback=True))
+    assert fused["t_memory"] < unfused["t_memory"]
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +255,37 @@ def test_cli_sweep_emits_table(capsys, tmp_path):
     assert "cost-model prediction" in text
     captured = capsys.readouterr()
     assert "bsp/ps/none/wfbp" in captured.out
+
+
+def test_cli_emit_json_records_perf_trajectory(tmp_path):
+    import json
+
+    out = tmp_path / "bench.json"
+    rc = cli_main([
+        "--substrate", "timeline",
+        "--grid", "sync=bsp,local arch=allreduce",
+        "--steps", "24", "--workers", "4", "--emit-json", str(out),
+    ])
+    assert rc == 0
+    rec = json.loads(out.read_text())
+    assert rec["substrate"] == "timeline"
+    assert rec["n_cells"] == 2
+    assert rec["sweep_wall_clock_s"] > 0
+    cell = rec["cells"][0]
+    assert set(cell) == {"tag", "replicas", "measured", "predicted", "rel_err"}
+    # rel_err exists exactly for the keys measured and predicted share
+    shared = set(cell["measured"]) & set(cell["predicted"])
+    assert shared and set(cell["rel_err"]) == shared
+
+
+def test_cli_roofline_substrate(capsys):
+    rc = cli_main([
+        "--substrate", "roofline",
+        "--grid", "sync=bsp compressor=none,qsgd:levels=16",
+        "--workers", "8",
+    ])
+    assert rc == 0
+    assert "bottleneck" in capsys.readouterr().out
 
 
 def test_format_csv_roundtrip():

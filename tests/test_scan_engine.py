@@ -1,0 +1,179 @@
+"""Scan-engine equivalence: the jitted lax.scan training engine must match
+the per-step Python-loop reference for EVERY sync scheme x compressor x EF
+cell of the taxonomy, the fused Pallas EF kernel must match unfused EF
+semantics, and the vectorized timeline bsp/local branches must match their
+per-iteration loop."""
+
+import numpy as np
+import pytest
+
+from repro.core.compression import get_compressor
+from repro.core.compression.base import list_compressors
+from repro.core.simulate import (
+    SimCfg,
+    TimelineCfg,
+    _comm_bytes,
+    _comm_time,
+    quadratic_problem,
+    simulate_timeline,
+    simulate_training,
+    simulate_training_batch,
+    simulate_training_reference,
+)
+
+SYNCS = ("bsp", "local", "ssp", "asp", "gossip")
+COMPRESSORS = (
+    (None, {}),
+    ("qsgd", {"levels": 16}),
+    ("terngrad", {}),
+    ("signsgd_packed", {}),
+    ("topk", {"ratio": 0.1}),
+)
+
+
+def _cfg(sync, comp_name, kw, ef, **over):
+    comp = get_compressor(comp_name, **kw) if comp_name else None
+    base = dict(n_workers=4, sync=sync, steps=10, lr=0.03, staleness=3,
+                local_steps=4, compressor=comp, error_feedback=ef, seed=3)
+    base.update(over)
+    return SimCfg(**base)
+
+
+def _assert_equivalent(eng, ref, *, rtol=2e-4, atol=1e-5, tag=""):
+    for k in ("loss", "consensus", "bits"):
+        np.testing.assert_allclose(eng[k], ref[k], rtol=rtol, atol=atol,
+                                   err_msg=f"{tag}/{k}")
+    assert abs(eng["x_star_err"] - ref["x_star_err"]) < 1e-3, tag
+
+
+@pytest.mark.parametrize("sync", SYNCS)
+@pytest.mark.parametrize("comp_name,kw", COMPRESSORS,
+                         ids=[c[0] or "dense" for c in COMPRESSORS])
+@pytest.mark.parametrize("ef", (False, True), ids=("noef", "ef"))
+def test_engine_matches_reference(sync, comp_name, kw, ef):
+    """Every taxonomy cell runs through the one compiled scan and reproduces
+    the loop reference (same seeds) within float tolerance."""
+    if ef and comp_name is None:
+        pytest.skip("EF without a compressor is a no-op cell")
+    cfg = _cfg(sync, comp_name, kw, ef)
+    eng = simulate_training(cfg)
+    ref = simulate_training_reference(cfg)
+    _assert_equivalent(eng, ref, tag=f"{sync}/{comp_name}/ef={ef}")
+
+
+@pytest.mark.parametrize("name", list_compressors())
+def test_every_registered_compressor_matches_reference(name):
+    """The acceptance claim is EVERY registered compressor, not a sample:
+    sweep the whole registry (including compressors with bespoke scan fast
+    paths — exactly the ones that could silently drift from their
+    compress/decompress pair) through the engine with EF on."""
+    cfg = _cfg("bsp", name, {}, True, steps=8, lr=0.02)
+    eng = simulate_training(cfg)
+    ref = simulate_training_reference(cfg)
+    _assert_equivalent(eng, ref, tag=f"registry/{name}")
+
+
+def test_fused_ef_kernel_matches_unfused_semantics():
+    """qsgd_kernel + EF goes through the fused Pallas qsgd_ef kernel in the
+    engine; the reference composes the generic three-pass EF pipeline
+    (a = g + e; quantize a; e' = a - deq).  Same keys -> same uniform draws,
+    so the two must agree to float tolerance, and EF must actually engage
+    (nonzero residual)."""
+    cfg = _cfg("bsp", "qsgd_kernel", {"levels": 16}, True, steps=30, lr=0.05)
+    eng = simulate_training(cfg)
+    ref = simulate_training_reference(cfg)
+    _assert_equivalent(eng, ref, tag="fused-ef")
+    # the fused path is exercised (the compressor defines the hook) ...
+    assert hasattr(cfg.compressor, "compress_decompress_ef")
+    # ... and differs from the no-EF trajectory (the residual is live)
+    no_ef = simulate_training(_cfg("bsp", "qsgd_kernel", {"levels": 16}, False,
+                                   steps=30, lr=0.05))
+    assert not np.allclose(eng["loss"], no_ef["loss"])
+
+
+def test_batch_replicas_match_individual_runs():
+    """vmap over the replica-seed axis is exact: each row of the batched run
+    equals the correspondingly-seeded single run."""
+    comp = get_compressor("qsgd", levels=16)
+    problem = quadratic_problem(n_workers=4, seed=0)
+    base = dict(n_workers=4, sync="asp", staleness=2, steps=12, lr=0.03,
+                compressor=comp, error_feedback=True)
+    batch = simulate_training_batch(SimCfg(**base, seed=0), problem, seeds=[0, 1, 2])
+    for sd, out in zip((0, 1, 2), batch):
+        single = simulate_training_batch(SimCfg(**base, seed=sd), problem)[0]
+        np.testing.assert_allclose(out["loss"], single["loss"], rtol=1e-6)
+    # distinct seeds give distinct trajectories
+    assert not np.allclose(batch[0]["loss"], batch[1]["loss"])
+
+
+def test_engine_rejects_unknown_sync():
+    with pytest.raises(ValueError, match="allreduce"):
+        simulate_training(SimCfg(sync="allreduce", n_workers=4, steps=2))
+
+
+def test_dense_local_bits_exact():
+    """Analytic in-carry bit accounting is exact (integers in f32 range)."""
+    cfg = _cfg("local", None, {}, False, steps=8, local_steps=4)
+    eng = simulate_training(cfg)
+    ref = simulate_training_reference(cfg)
+    np.testing.assert_array_equal(eng["bits"], ref["bits"])
+    # two sync rounds of 32 bits x dim x workers each
+    assert eng["bits"][-1] == 2 * 32.0 * 64 * 4
+
+
+# ---------------------------------------------------------------------------
+# Timeline vectorization (bsp/local) vs the per-iteration loop.
+# ---------------------------------------------------------------------------
+
+
+def _timeline_loop_reference(cfg: TimelineCfg):
+    """The pre-vectorization per-iteration loop for bsp/local."""
+    rng = np.random.default_rng(cfg.seed)
+    n, T = cfg.n_workers, cfg.iters
+    compute = rng.lognormal(np.log(cfg.compute_mean), cfg.straggler_sigma, (n, T))
+    compute[0] *= cfg.straggler_worker_slowdown
+    finish = np.zeros((n, T))
+    t = np.zeros(n)
+    comm_total = np.zeros(n)
+    bytes_pw = 0.0
+    rb = _comm_bytes(cfg)
+    if cfg.sync == "bsp":
+        for it in range(T):
+            t_comp = t + compute[:, it]
+            c = _comm_time(cfg, concurrent=n)
+            t = np.full(n, t_comp.max() + c)
+            comm_total += t - t_comp
+            bytes_pw += rb
+            finish[:, it] = t
+    else:
+        for it in range(T):
+            t = t + compute[:, it]
+            finish[:, it] = t
+            if (it + 1) % cfg.local_steps == 0:
+                barrier = t.max()
+                c = _comm_time(cfg, concurrent=n)
+                comm_total += barrier + c - t
+                bytes_pw += rb
+                t = np.full(n, barrier + c)
+                finish[:, it] = t
+    return finish, comm_total, bytes_pw
+
+
+@pytest.mark.parametrize("kw", [
+    dict(sync="bsp", iters=60),
+    dict(sync="bsp", iters=60, straggler_worker_slowdown=4.0),
+    dict(sync="local", local_steps=8, iters=64),
+    dict(sync="local", local_steps=7, iters=60),  # trailing partial segment
+    dict(sync="local", local_steps=8, iters=5),   # no sync round at all
+], ids=["bsp", "bsp-straggler", "local", "local-tail", "local-short"])
+def test_timeline_vectorized_matches_loop(kw):
+    cfg = TimelineCfg(n_workers=6, **kw)
+    res = simulate_timeline(cfg)
+    finish, comm_total, bytes_pw = _timeline_loop_reference(cfg)
+    np.testing.assert_allclose(res.finish_times, finish, rtol=1e-12)
+    np.testing.assert_allclose(res.bytes_per_worker, bytes_pw, rtol=1e-12)
+    makespan = finish.max()
+    np.testing.assert_allclose(res.comm_frac,
+                               comm_total.sum() / (makespan * cfg.n_workers),
+                               rtol=1e-12)
+    assert res.mean_staleness == 0.0
