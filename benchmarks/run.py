@@ -18,6 +18,7 @@ MODULES = (
     ("tableII_fig4_sync", "benchmarks.sync_timeline"),
     ("fig6_compression", "benchmarks.compression_fidelity"),
     ("tableIV_convergence", "benchmarks.convergence"),
+    ("sweep_batched", "benchmarks.sweep"),
     ("sec7_schedule", "benchmarks.schedule_table"),
     ("kernels", "benchmarks.kernels_bench"),
     ("train_micro", "benchmarks.train_micro"),
@@ -27,10 +28,16 @@ MODULES = (
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="", help="comma-separated module tags")
+    p.add_argument("--no-speedup", action="store_true",
+                   help="skip the Python-loop-reference / per-cell baselines "
+                        "(the heavy denominators of the convergence and sweep "
+                        "speedup rows) — forwarded to modules whose run() "
+                        "accepts no_speedup")
     args = p.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     import importlib
+    import inspect
 
     print("name,us_per_call,derived")
     failures = []
@@ -40,7 +47,15 @@ def main(argv=None) -> int:
         t0 = time.perf_counter()
         try:
             mod = importlib.import_module(modname)
-            for row in mod.run():
+            # forward --no-speedup only where supported, so the reference
+            # baseline is measured at most once per module and never when
+            # the flag asks to skip it
+            kwargs = (
+                {"no_speedup": args.no_speedup}
+                if "no_speedup" in inspect.signature(mod.run).parameters
+                else {}
+            )
+            for row in mod.run(**kwargs):
                 print(row.csv())
             print(f"# {tag} done in {time.perf_counter()-t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001

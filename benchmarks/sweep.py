@@ -1,0 +1,54 @@
+"""Shape-class batched sweep benchmark (the BENCH_sweep.json record).
+
+The 45-cell perf-tracking matrix (5 sync/topology schemes x 3 quantization
+levels x 3 learning rates, qsgd+EF) spans exactly 5 shape classes; the
+batched engine must compile once per class — not once per cell — and beat
+the per-cell PR 2 path by >= 5x wall-clock while reproducing its results to
+numerical tolerance.  Asserted here (``sweep/claims_validated``) and written
+to ``BENCH_sweep.json`` at the repo root for the across-PR trajectory.
+
+``run(no_speedup=True)`` (the ``--no-speedup`` aggregator flag) skips the
+expensive per-cell baseline and records only the batched numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_sweep.json")
+
+
+def run(no_speedup: bool = False) -> list[Row]:
+    from repro.experiments.runner import measure_sweep_speedup
+
+    rec = measure_sweep_speedup(replicas=3, percell=not no_speedup)
+    rows = [
+        Row("sweep/shape_classes", 0.0,
+            f"{rec['n_cells']} cells -> {rec['n_shape_classes']} classes, "
+            f"{rec['compiles_batched']} compiles"),
+        Row("sweep/batched", rec["batched_s"] * 1e6,
+            f"{rec['cells_per_s_batched']:.1f} cells/s "
+            f"({rec['n_cells']} cells x {rec['replicas']} replicas, "
+            f"{rec['steps']} steps)"),
+    ]
+    assert rec["compiles_batched"] == rec["n_shape_classes"], rec
+
+    if not no_speedup:
+        rows.append(Row(
+            "sweep/speedup_vs_percell", rec["percell_s"] * 1e6,
+            f"{rec['speedup']:.1f}x over {rec['compiles_percell']} per-cell "
+            f"compiles; max dev loss={rec['max_rel_dev_loss']:.1e} "
+            f"bits={rec['max_rel_dev_bits']:.1e}"))
+        # acceptance: >= 5x, per-cell results reproduced to tolerance
+        assert rec["speedup"] >= 5.0, rec
+        assert rec["max_rel_dev_loss"] < 2e-4, rec
+        assert rec["max_rel_dev_bits"] < 1e-6, rec
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    rows.append(Row("sweep/claims_validated", 0.0, True))
+    return rows

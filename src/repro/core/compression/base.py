@@ -6,17 +6,32 @@ back.  ``wire_bits(n)`` is the analytic per-worker upload size used by the
 communication-cost benchmarks (paper Table IV) and the roofline collective
 term; for payload tensors the simulated collective moves exactly the payload
 arrays, so the two agree except for threshold-style methods whose true
-variable-length encoding XLA cannot express (accounted analytically).
+variable-length encoding XLA cannot express (measured from the realized
+support instead — see :func:`roundtrip_bits`).
+
+Batchability contract (the shape-class sweep engine,
+:mod:`repro.core.simulate`): a compressor's knobs split into
+
+* **structural** attributes that change the XLA program (the class itself,
+  a Pallas kernel's specialization constants) — these live in the
+  :func:`shape_fingerprint` and force a separate compile, and
+* **value** knobs (``BATCH_KNOBS``) that only change numbers — these are
+  excluded from the fingerprint, extracted by :func:`batch_param_values`,
+  and passed back in as *traced* scalars through ``roundtrip_p(key, x, p)``
+  so cells that differ only in knob values share ONE compiled program.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable, Protocol
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+f32 = jnp.float32
 
 
 @dataclass
@@ -82,6 +97,123 @@ def compress_decompress_ef(comp, key: jax.Array, g: jax.Array, e: jax.Array):
     a = g + e
     out = compress_decompress(comp, key, a)
     return out, a - out
+
+
+# ---------------------------------------------------------------------------
+# Parameterized (shape-class batchable) roundtrips + measured wire bits.
+# ---------------------------------------------------------------------------
+
+
+def measured_wire_bits(x_hat: jax.Array) -> jax.Array:
+    """Realized per-worker wire bits of a data-dependent sparse payload:
+    64 bits (32-bit value + 32-bit index) per transmitted coordinate.  This
+    is the in-engine replacement for the analytic NaN charge — threshold /
+    variance sparsifiers whose support XLA cannot size statically."""
+    return jnp.count_nonzero(x_hat).astype(f32) * 64.0
+
+
+def roundtrip_bits(comp, key: jax.Array, x: jax.Array, p: dict | None = None):
+    """``(x_hat, wire_bits)`` roundtrip with *traced* knob values ``p``.
+
+    Dispatches to the compressor's ``roundtrip_p(key, x, p)`` when defined
+    (the shape-class batchable fast path: every knob in ``BATCH_KNOBS``
+    arrives as a traced scalar in ``p``); otherwise composes the plain
+    :func:`compress_decompress` roundtrip — knob-free compressors need
+    nothing else.  ``wire_bits`` is the per-worker upload of this round:
+    the analytic size when it is static, the realized
+    :func:`measured_wire_bits` when the analytic model returns NaN.
+    """
+    fn = getattr(comp, "roundtrip_p", None)
+    if fn is not None:
+        return fn(key, x, p or {})
+    x_hat = compress_decompress(comp, key, x)
+    wb = comp.wire_bits(x.size)
+    bits = measured_wire_bits(x_hat) if wb != wb else jnp.asarray(wb, f32)
+    return x_hat, bits
+
+
+def roundtrip_bits_ef(comp, key: jax.Array, g: jax.Array, e: jax.Array,
+                      p: dict | None = None):
+    """Error-feedback roundtrip with traced knobs: ``(x_hat, e_new, bits)``.
+
+    Order of preference: a knob-aware ``roundtrip_ef_p``, then a fused
+    knob-free ``compress_decompress_ef`` kernel (e.g. the Pallas qsgd_ef
+    path), then the generic ``e' = a - C(a)`` composition."""
+    fn = getattr(comp, "roundtrip_ef_p", None)
+    if fn is not None:
+        return fn(key, g, e, p or {})
+    fused = getattr(comp, "compress_decompress_ef", None)
+    if fused is not None and getattr(comp, "roundtrip_p", None) is None:
+        x_hat, e_new = fused(key, g, e)
+        wb = comp.wire_bits(g.size)
+        bits = measured_wire_bits(x_hat) if wb != wb else jnp.asarray(wb, f32)
+        return x_hat, e_new, bits
+    a = g + e
+    x_hat, bits = roundtrip_bits(comp, key, a, p)
+    return x_hat, a - x_hat, bits
+
+
+def batch_knobs(comp) -> tuple[str, ...]:
+    """Field names whose values are traced (not structural) for this class."""
+    return tuple(getattr(comp, "BATCH_KNOBS", ()))
+
+
+def batch_param_values(comp, dim: int) -> dict[str, float]:
+    """The traced knob values of one cell, keyed for ``roundtrip_p``.
+
+    Classes may override ``batch_params(dim)`` to emit *derived* knobs
+    (top-k style classes collapse ``ratio``/``k`` into one element count);
+    the default reads ``BATCH_KNOBS`` attributes verbatim."""
+    if comp is None:
+        return {}
+    fn = getattr(comp, "batch_params", None)
+    if fn is not None:
+        return {k: float(v) for k, v in fn(dim).items()}
+    return {k: float(getattr(comp, k)) for k in batch_knobs(comp)}
+
+
+def shape_fingerprint(comp) -> tuple:
+    """Hashable identity of the compressor's *program structure*: the class
+    plus every dataclass field that is NOT a traced knob.  Two cells with
+    equal fingerprints (and equal engine statics) share one compiled sweep
+    program; knob values ride along as traced arrays."""
+    if comp is None:
+        return ("dense",)
+    fn = getattr(comp, "shape_fingerprint", None)
+    if fn is not None:
+        return fn()
+    knobs = set(batch_knobs(comp))
+    static = tuple(
+        (f.name, getattr(comp, f.name))
+        for f in dataclasses.fields(comp)
+        if f.name not in knobs
+    )
+    return (type(comp).__name__,) + static
+
+
+def structural_envelope(comp) -> tuple:
+    """Program-shape extras a *representative* contributes beyond the
+    fingerprint: knob values that also size arrays (PowerSGD's factor width).
+    Part of the compiled-program cache key; () for everything else."""
+    if comp is None:
+        return ()
+    fn = getattr(comp, "structural_envelope", None)
+    return fn() if fn is not None else ()
+
+
+def merge_representative(comps: list):
+    """One instance whose program structure can serve every cell of a shape
+    class.  The default is the first instance (fingerprint equality already
+    guarantees identical structure); classes whose knobs have a structural
+    *envelope* (PowerSGD's factor width = max rank) override
+    ``merge_representative``."""
+    rep = comps[0]
+    if rep is None:
+        return None
+    fn = getattr(rep, "merge_representative", None)
+    if fn is not None:
+        return fn(comps)
+    return rep
 
 
 _REGISTRY: dict[str, Callable[..., Any]] = {}

@@ -3,6 +3,14 @@
 Same wire semantics as their jnp counterparts (tested equal), but the
 compression pass is a single fused VMEM-tiled kernel, and SignSGD gets true
 1-bit packing (32x wire reduction — int8 payloads are only 4x).
+
+Batchability note: these classes declare NO ``BATCH_KNOBS`` — a Pallas
+kernel specializes on its quantization constants (``levels`` is a
+``static_argnames`` of the ops wrappers), so the knob is *structural* and
+stays in the shape fingerprint: two ``qsgd_kernel`` cells with different
+levels are different shape classes (unlike the jnp ``qsgd``, whose levels
+trace).  The fused EF kernel still runs inside the batched sweep via the
+``compress_decompress_ef`` dispatch in ``base.roundtrip_bits_ef``.
 """
 
 from __future__ import annotations

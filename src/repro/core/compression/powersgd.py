@@ -51,11 +51,46 @@ class PowerSGD:
     rank: int = 4
     unbiased: bool = False
     reduce_mode: str = "powersgd"
+    #: ``rank`` is a traced knob for the sweep engine; its structural
+    #: envelope (the factor width) is the class maximum — see
+    #: ``merge_representative`` / ``roundtrip_p``.
+    BATCH_KNOBS = ("rank",)
 
     def init_q(self, n: int, key: jax.Array) -> jax.Array:
-        """Initial Q, IDENTICAL on every worker (fixed key)."""
+        """Initial Q, IDENTICAL on every worker (fixed key).  Columns are
+        keyed individually (fold_in on the column index) so a width-R init
+        agrees with a width-r init on its first r columns — the property
+        that lets the sweep engine mask a max-rank program down to any
+        cell's traced rank without changing the trajectory."""
         a, b = shape2d(n)
-        return jax.random.normal(key, (b, self.rank), f32)
+        keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(jnp.arange(self.rank))
+        return jax.vmap(lambda k: jax.random.normal(k, (b,), f32))(keys).T
+
+    def structural_envelope(self) -> tuple:
+        return ("rank", self.rank)
+
+    def merge_representative(self, comps: list) -> "PowerSGD":
+        """Widest instance of the shape class: its (b, max-rank) factors
+        serve every cell; narrower ranks zero the trailing columns."""
+        import dataclasses as _dc
+
+        return _dc.replace(self, rank=max(c.rank for c in comps))
+
+    def roundtrip_p(self, key, x, p):
+        """Local power-iteration roundtrip with *traced* rank: columns at
+        index >= rank are zeroed after every projection.  Householder QR's
+        leading columns depend only on the input's leading columns, so the
+        masked width-R program reproduces the width-r program exactly."""
+        r = p.get("rank", 1.0 * self.rank)
+        n = x.size
+        a, b = shape2d(n)
+        colmask = (jnp.arange(self.rank) < r)[None, :]
+        M = jnp.pad(x, (0, a * b - n)).reshape(a, b)
+        Q = self.init_q(n, jax.random.key(7)) * colmask
+        for _ in range(2):
+            P = orthonormalize(M @ Q) * colmask
+            Q = (M.T @ P) * colmask
+        return (P @ Q.T).reshape(-1)[:n], (a + b) * r * 32.0
 
     def factor_shapes(self, n: int) -> tuple[tuple[int, int], tuple[int, int]]:
         a, b = shape2d(n)

@@ -53,6 +53,15 @@ class TernGrad:
     unbiased: bool = True
     reduce_mode: str = "none"
     clip_sigma: float = 0.0  # optional gradient clipping (paper §V TernGrad)
+    BATCH_KNOBS = ("clip_sigma",)
+
+    def roundtrip_p(self, key, x, p):
+        cs = p.get("clip_sigma", self.clip_sigma)
+        sig = jnp.std(x)
+        x = jnp.where(cs > 0, jnp.clip(x, -cs * sig, cs * sig), x)
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+        b = (jax.random.uniform(key, x.shape) < jnp.abs(x) / s).astype(f32)
+        return jnp.sign(x) * b * s, jnp.asarray(x.size * 2.0 + 32, f32)
 
     def compress(self, key, x) -> Compressed:
         if self.clip_sigma:
@@ -79,6 +88,27 @@ class QSGD:
     levels: int = 16  # s
     unbiased: bool = True
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("levels",)
+
+    def batch_params(self, dim: int) -> dict:
+        # the int8 wire format caps |code| at s; past 127 compress() would
+        # silently wrap while the traced roundtrip would not — fail loudly
+        if self.levels > 127:
+            raise ValueError(f"qsgd levels={self.levels} exceeds the int8 "
+                             "wire format (max 127)")
+        return {"levels": self.levels}
+
+    def roundtrip_p(self, key, x, p):
+        s = p.get("levels", 1.0 * self.levels)
+        norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)
+        y = jnp.abs(x) / norm * s
+        l = jnp.floor(y)
+        l = l + (jax.random.uniform(key, x.shape) < y - l)
+        # identical to decompress(compress(...)) while |l| <= 127 (int8 range)
+        return (
+            jnp.sign(x) * l / s * norm,
+            x.size * (jnp.log2(s) + 1) + 32,
+        )
 
     def compress(self, key, x) -> Compressed:
         s = self.levels
@@ -157,6 +187,26 @@ class NaturalDithering:
     levels: int = 8  # number of geometric levels
     unbiased: bool = True
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("levels",)
+
+    def roundtrip_p(self, key, x, p):
+        L = p.get("levels", 1.0 * self.levels)
+        norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)
+        y = jnp.abs(x) / norm
+        ymin = 2.0 ** -(L - 1)
+        e = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(y, ymin))), -(L - 1), 0)
+        hi = jnp.exp2(e)
+        lo = hi / 2
+        small = y < ymin
+        p_hi = jnp.where(small, y / ymin, (y - lo) / jnp.maximum(hi - lo, 1e-30))
+        take_hi = jax.random.uniform(key, x.shape) < p_hi
+        ZERO = -L  # sentinel: decodes to 0
+        code = jnp.clip(jnp.where(take_hi, e, jnp.where(small, ZERO, e - 1)), ZERO, 0)
+        mag = jnp.where(code <= -L, 0.0, jnp.exp2(code))
+        return (
+            jnp.sign(x) * mag * norm,
+            x.size * (jnp.log2(L) + 1) + 32,
+        )
 
     def compress(self, key, x) -> Compressed:
         norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)

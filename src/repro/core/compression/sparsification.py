@@ -9,12 +9,16 @@ ATOMO spectral sparsification [174], and variance-based sparsification
 
 Top-k-style methods carry (values, int32 indices) payloads with *static* k —
 the TPU wire format (DESIGN.md §6).  Threshold methods cannot have static
-payload shapes; they transmit a dense masked tensor in simulation and
-account wire bits analytically from the realized sparsity (documented).
+payload shapes; they transmit a dense masked tensor in simulation and their
+wire bits are *measured* from the realized support (``measured_wire_bits``,
+64 bits per transmitted coordinate) instead of the old analytic-0 charge.
 All compress/decompress pairs here are static-shape pure functions, so the
 generic ``compress_decompress`` roundtrip (repro.core.compression.base) is
-scan/vmap-safe for every one of them — no per-class fast path needed (the
-unused payload fields are dead-code-eliminated under jit).
+scan/vmap-safe for every one of them; each class additionally defines a
+``roundtrip_p`` whose selection knobs (ratio/k/tau/proportion/z/budget)
+arrive as *traced* scalars — k-selection becomes a rank mask
+(:func:`_topk_mask`) so one compiled sweep program serves every knob value
+of a shape class.
 """
 
 from __future__ import annotations
@@ -24,7 +28,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import Compressed, register
+from repro.core.compression.base import Compressed, measured_wire_bits, register
 
 f32 = jnp.float32
 
@@ -33,6 +37,17 @@ def _k_of(n: int, ratio: float, k: int) -> int:
     if k:
         return min(k, n)
     return max(1, int(n * ratio))
+
+
+def _topk_mask(score: jax.Array, k) -> jax.Array:
+    """Boolean mask of the ``k`` largest scores with ``k`` *traced* — the
+    shape-class engine's replacement for ``lax.top_k`` (whose k is baked
+    into the program).  Stable argsort breaks ties by index, matching
+    ``top_k`` selection, so masked and gathered payloads keep the same
+    support."""
+    order = jnp.argsort(-score)
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(score.size))
+    return rank < k
 
 
 @register("topk")
@@ -45,6 +60,15 @@ class TopK:
     k: int = 0
     unbiased: bool = False
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("ratio", "k")
+
+    def batch_params(self, dim: int) -> dict:
+        return {"k": _k_of(dim, self.ratio, self.k)}
+
+    def roundtrip_p(self, key, x, p):
+        k = p.get("k", 1.0 * _k_of(x.size, self.ratio, self.k))
+        keep = _topk_mask(jnp.abs(x), k)
+        return jnp.where(keep, x, 0.0), k * 64.0
 
     def compress(self, key, x) -> Compressed:
         kk = _k_of(x.size, self.ratio, self.k)
@@ -80,10 +104,20 @@ class RandomK:
     k: int = 0
     scale: bool = True
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("ratio", "k")
 
     @property
     def unbiased(self) -> bool:
         return self.scale
+
+    def batch_params(self, dim: int) -> dict:
+        return {"k": _k_of(dim, self.ratio, self.k)}
+
+    def roundtrip_p(self, key, x, p):
+        k = p.get("k", 1.0 * _k_of(x.size, self.ratio, self.k))
+        keep = _topk_mask(jax.random.uniform(key, (x.size,)), k)
+        vals = x * (x.size / k) if self.scale else x
+        return jnp.where(keep, vals, 0.0), k * 64.0
 
     def compress(self, key, x) -> Compressed:
         kk = _k_of(x.size, self.ratio, self.k)
@@ -114,6 +148,16 @@ class WangniSparsifier:
     ratio: float = 0.01
     unbiased: bool = True
     reduce_mode: str = "sum"
+    BATCH_KNOBS = ("ratio",)
+
+    def roundtrip_p(self, key, x, p):
+        ratio = p.get("ratio", self.ratio)
+        k = jnp.maximum(1.0, x.size * ratio)
+        denom = jnp.maximum(jnp.sum(jnp.abs(x)), 1e-30)
+        prob = jnp.minimum(1.0, k * jnp.abs(x) / denom)
+        keep = jax.random.uniform(key, x.shape) < prob
+        vals = jnp.where(keep, x / jnp.maximum(prob, 1e-30), 0.0)
+        return vals, k * 64.0  # expected budget (matches wire_bits)
 
     def compress(self, key, x) -> Compressed:
         k = max(1.0, x.size * self.ratio)
@@ -139,6 +183,12 @@ class FixedThreshold:
     tau: float = 1e-3
     unbiased: bool = False
     reduce_mode: str = "sum"
+    BATCH_KNOBS = ("tau",)
+
+    def roundtrip_p(self, key, x, p):
+        tau = p.get("tau", self.tau)
+        out = jnp.where(jnp.abs(x) >= tau, x, 0.0)
+        return out, measured_wire_bits(out)
 
     def compress(self, key, x) -> Compressed:
         keep = jnp.abs(x) >= self.tau
@@ -163,6 +213,13 @@ class AdaptiveThreshold:
     proportion: float = 0.01
     unbiased: bool = False
     reduce_mode: str = "sum"
+    BATCH_KNOBS = ("proportion",)
+
+    def roundtrip_p(self, key, x, p):
+        pi = p.get("proportion", self.proportion)
+        tau = jnp.quantile(jnp.abs(x), 1.0 - pi)
+        out = jnp.where(jnp.abs(x) >= tau, x, 0.0)
+        return out, jnp.maximum(1.0, x.size * pi) * 64.0
 
     def compress(self, key, x) -> Compressed:
         tau = jnp.quantile(jnp.abs(x), 1.0 - self.proportion)
@@ -189,6 +246,24 @@ class SparseBinaryCompression:
     k: int = 0
     unbiased: bool = False
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("ratio", "k")
+
+    def batch_params(self, dim: int) -> dict:
+        return {"k": _k_of(dim, self.ratio, self.k)}
+
+    def roundtrip_p(self, key, x, p):
+        k = p.get("k", 1.0 * _k_of(x.size, self.ratio, self.k))
+        kmask = _topk_mask(jnp.abs(x), k)
+        pos = kmask & (x > 0)
+        neg = kmask & ~(x > 0)
+        npos = jnp.maximum(jnp.sum(pos), 1)
+        nneg = jnp.maximum(jnp.sum(neg), 1)
+        mu_pos = jnp.sum(jnp.where(pos, x, 0.0)) / npos
+        mu_neg = -jnp.sum(jnp.where(neg, x, 0.0)) / nneg
+        take_pos = mu_pos >= mu_neg
+        mu = jnp.where(take_pos, mu_pos, -mu_neg)
+        out = jnp.where(kmask & ((x > 0) == take_pos), mu, 0.0)
+        return out, k * 33.0 + 32
 
     def compress(self, key, x) -> Compressed:
         kk = _k_of(x.size, self.ratio, self.k)
@@ -222,6 +297,16 @@ class SparseTernaryCompression:
     k: int = 0
     unbiased: bool = False
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("ratio", "k")
+
+    def batch_params(self, dim: int) -> dict:
+        return {"k": _k_of(dim, self.ratio, self.k)}
+
+    def roundtrip_p(self, key, x, p):
+        k = p.get("k", 1.0 * _k_of(x.size, self.ratio, self.k))
+        kmask = _topk_mask(jnp.abs(x), k)
+        mu = jnp.sum(jnp.where(kmask, jnp.abs(x), 0.0)) / k
+        return jnp.where(kmask, jnp.sign(x) * mu, 0.0), k * 34.0 + 32
 
     def compress(self, key, x) -> Compressed:
         kk = _k_of(x.size, self.ratio, self.k)
@@ -250,6 +335,19 @@ class AtomoSVD:
     rank_budget: int = 4
     unbiased: bool = True
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("rank_budget",)
+
+    def roundtrip_p(self, key, x, p):
+        budget = p.get("rank_budget", 1.0 * self.rank_budget)
+        n = x.size
+        a, b = self._shape2d(n)
+        u, s, vt = jnp.linalg.svd(x.reshape(a, b), full_matrices=False)
+        prob = jnp.minimum(1.0, s * budget / jnp.maximum(jnp.sum(s), 1e-30))
+        keep = jax.random.uniform(key, s.shape) < prob
+        s_hat = jnp.where(keep, s / jnp.maximum(prob, 1e-30), 0.0)
+        # keep only the 2*budget largest kept atoms (the payload truncation)
+        s_hat = jnp.where(_topk_mask(s_hat, 2 * budget), s_hat, 0.0)
+        return ((u * s_hat[None, :]) @ vt).reshape(-1), 2 * budget * (a + b) * 32.0
 
     def _shape2d(self, n: int) -> tuple[int, int]:
         r = int(n**0.5)
@@ -296,6 +394,13 @@ class VarianceSparsifier:
     z: float = 1.0  # keep if |g| > z * sigma
     unbiased: bool = False
     reduce_mode: str = "sum"
+    BATCH_KNOBS = ("z",)
+
+    def roundtrip_p(self, key, x, p):
+        z = p.get("z", self.z)
+        sigma = jnp.std(x) + 1e-30
+        out = jnp.where(jnp.abs(x) > z * sigma, x, 0.0)
+        return out, measured_wire_bits(out)
 
     def compress(self, key, x) -> Compressed:
         sigma = jnp.std(x) + 1e-30

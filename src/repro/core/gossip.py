@@ -28,12 +28,25 @@ f32 = jnp.float32
 
 
 def ring_mixing_matrix(n: int, w: float = 1.0 / 3.0) -> np.ndarray:
-    """Symmetric doubly-stochastic ring weights (benchmark/consensus use)."""
+    """Symmetric doubly-stochastic ring weights (benchmark/consensus use).
+    Keep element-wise equal to :func:`ring_mixing_matrix_traced` — the
+    engine-vs-reference equivalence tests of the training simulator rely on
+    the two definitions agreeing (including n=2, where both neighbors
+    coincide and the off-diagonal weight doubles)."""
     W = np.eye(n) * (1 - 2 * w)
     for j in range(n):
         W[j, (j + 1) % n] += w
         W[j, (j - 1) % n] += w
     return W
+
+
+def ring_mixing_matrix_traced(n: int, w) -> jax.Array:
+    """:func:`ring_mixing_matrix` with a *traced* weight ``w`` — the form the
+    batched sweep engine builds inside jit so the mixing weight can vary per
+    cell without retracing."""
+    eye = jnp.eye(n, dtype=f32)
+    ring = jnp.roll(eye, 1, axis=0) + jnp.roll(eye, -1, axis=0)
+    return eye * (1 - 2 * w) + w * ring
 
 
 def exp_mixing_matrix(n: int) -> np.ndarray:

@@ -19,13 +19,32 @@ from repro.experiments.scenario import (  # noqa: F401
     expand,
     grid,
 )
-from repro.experiments.runner import (  # noqa: F401
-    ScenarioResult,
-    estimated_wire_bytes,
-    measure_engine_speedup,
-    roofline_row,
-    rounds_per_iter,
-    run_scenario,
-    run_scenarios,
-)
-from repro.experiments.tables import format_table  # noqa: F401
+
+#: runner/tables exports resolve lazily (PEP 562): importing them pulls in
+#: jax, and the ``--substrate trainer`` CLI lane must be able to set
+#: XLA_FLAGS (forced host devices) BEFORE jax initializes.
+_LAZY = {
+    "ScenarioResult": "repro.experiments.runner",
+    "estimated_wire_bytes": "repro.experiments.runner",
+    "measure_engine_speedup": "repro.experiments.runner",
+    "measure_sweep_speedup": "repro.experiments.runner",
+    "roofline_row": "repro.experiments.runner",
+    "rounds_per_iter": "repro.experiments.runner",
+    "run_scenario": "repro.experiments.runner",
+    "run_scenarios": "repro.experiments.runner",
+    "sweep_matrix_45": "repro.experiments.runner",
+    "training_shape_key": "repro.experiments.runner",
+    "format_table": "repro.experiments.tables",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -12,6 +12,15 @@ dropped and reported on stderr. The default grid sweeps the paper's
 sync x architecture x compression matrix (16 valid cells) and prints a
 Table II-style comparison of measured vs cost-model-predicted time/bytes.
 
+``--substrate training`` batches the sweep by shape class — one compiled
+program per (sync x compressor-family x EF) class, however many cells vary
+the traced values (lr, staleness, H, compressor knobs); ``--emit-json``
+records the compile count next to the cells/sec.  ``--substrate trainer``
+runs the cells on the REAL mesh runtime with automated device-count
+selection (the largest valid data-parallel mesh that fits the available
+devices; cells that cannot run are skipped with the reason on stderr) —
+jax is imported lazily so the lane can force host devices first.
+
 ``--substrate roofline`` emits the analytic per-cell dry-run prediction
 (compute/memory/collective roofline terms); ``--emit-json PATH`` records
 measured metrics, predictions, relative error, and sweep wall-clock — on the
@@ -24,12 +33,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import sys
 import time
 
-from repro.experiments.runner import measure_engine_speedup, run_scenarios
+# NOTE: repro.experiments.runner (and through it jax) is imported lazily
+# inside main(): the trainer lane must be able to set XLA_FLAGS to force
+# host devices BEFORE jax initializes.
 from repro.experiments.scenario import Scenario, expand, grid
-from repro.experiments.tables import format_csv, format_table
 
 DEFAULT_GRID = "sync=bsp,local,asp arch=ps,allreduce,gossip compressor=none,qsgd:levels=16"
 
@@ -100,7 +111,7 @@ def main(argv=None) -> int:
     )
     p.add_argument("--grid", default=DEFAULT_GRID, help=f"axis spec (default: {DEFAULT_GRID!r})")
     p.add_argument("--substrate", default="timeline",
-                   choices=("timeline", "training", "schedule", "roofline"))
+                   choices=("timeline", "training", "schedule", "roofline", "trainer"))
     p.add_argument("--workers", type=int, default=16)
     p.add_argument("--steps", type=int, default=120)
     p.add_argument("--replicas", type=int, default=1,
@@ -147,6 +158,18 @@ def main(argv=None) -> int:
     print(f"# sweeping {len(scenarios)} scenarios on the {args.substrate} substrate "
           f"({len(dropped)} invalid cells dropped)", file=sys.stderr)
 
+    if args.substrate == "trainer":
+        return _trainer_sweep(args, scenarios)
+
+    from repro.experiments.runner import (
+        measure_engine_speedup,
+        run_scenarios,
+        training_shape_key,
+    )
+    from repro.core.simulate import engine_cache_stats
+    from repro.experiments.tables import format_csv, format_table
+
+    st0 = dataclasses.replace(engine_cache_stats())
     t0 = time.perf_counter()
     results = run_scenarios(scenarios, args.substrate, replicas=args.replicas)
     sweep_s = time.perf_counter() - t0
@@ -159,10 +182,73 @@ def main(argv=None) -> int:
             f.write(text)
     if args.emit_json:
         record = emit_json_record(results, sweep_s)
-        if args.substrate == "training" and not args.no_speedup:
-            record["engine_speedup"] = measure_engine_speedup()
+        if args.substrate == "training":
+            st1 = engine_cache_stats()
+            record["engine"] = {
+                "n_shape_classes": len({training_shape_key(s) for s in scenarios}),
+                "compiles": st1.compiles - st0.compiles,
+                "cache_hits": st1.hits - st0.hits,
+                "cells_per_s": len(results) / sweep_s,
+            }
+            if not args.no_speedup:
+                record["engine_speedup"] = measure_engine_speedup()
         with open(args.emit_json, "w") as f:
             json.dump(record, f, indent=2)
+        print(f"# wrote {args.emit_json}", file=sys.stderr)
+    return 0
+
+
+def _ensure_host_devices(n: int) -> int:
+    """Force ``n`` host-platform devices if (and only if) jax has not been
+    imported yet; returns the device count actually available."""
+    if "jax" not in sys.modules and n > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    import jax
+
+    return len(jax.devices())
+
+
+def _trainer_sweep(args, scenarios) -> int:
+    """The ``--substrate trainer`` lane: real mesh runtime with automated
+    device-count selection.  Cells whose largest valid mesh cannot fit the
+    available devices are skipped with the reason on stderr."""
+    want = min(max(s.n_workers for s in scenarios), 8)  # bound host-dev cost
+    ndev = _ensure_host_devices(want)
+
+    from repro.experiments.tables import format_csv, format_table
+    from repro.experiments.trainer_substrate import (
+        run_trainer_scenario,
+        select_trainer_device_count,
+    )
+
+    results, skipped = [], 0
+    t0 = time.perf_counter()
+    for s in scenarios:
+        dp, why = select_trainer_device_count(s, ndev)
+        if dp is None:
+            skipped += 1
+            print(f"# skip {s.tag()}: {why}", file=sys.stderr)
+            continue
+        print(f"# trainer cell {s.tag()}: data_par={dp} (of {ndev} devices)",
+              file=sys.stderr)
+        results.append(run_trainer_scenario(s, data_par=dp))
+    sweep_s = time.perf_counter() - t0
+    if not results:
+        print(f"# no trainer cells runnable ({skipped} skipped)", file=sys.stderr)
+        return 0
+    title = (f"trainer sweep: {len(results)} cells ({skipped} skipped), "
+             f"{ndev} devices, steps={args.steps}")
+    text = format_table(results, title=title) if args.format == "table" else format_csv(results)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    if args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(emit_json_record(results, sweep_s), f, indent=2)
         print(f"# wrote {args.emit_json}", file=sys.stderr)
     return 0
 

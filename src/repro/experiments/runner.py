@@ -10,11 +10,15 @@ Substrates:
 
 * ``timeline``  — :func:`repro.core.simulate.simulate_timeline` (Fig. 4 /
   Table II: throughput, staleness, idle, wire bytes under stragglers);
-* ``training``  — :func:`repro.core.simulate.simulate_training_batch` (§VIII
-  convergence: loss / consensus / upload bits). EVERY taxonomy cell — all
-  sync schemes, all registered compressors, EF on/off — runs its replica
-  seeds in ONE jitted ``lax.scan`` vmapped over the seed axis; nothing
-  falls back to the per-step Python loop
+* ``training``  — :func:`repro.core.simulate.simulate_training_classbatch`
+  (§VIII convergence: loss / consensus / upload bits). EVERY taxonomy cell —
+  all sync schemes, all registered compressors, EF on/off — runs its replica
+  seeds in ONE jitted ``lax.scan`` vmapped over the seed axis, and the sweep
+  runner additionally groups cells into *shape classes*
+  (:func:`training_shape_key`) so cells that differ only in traced values
+  (lr, staleness, Local-H, compressor knobs, gradient noise) share one
+  compiled program — a sweep compiles once per shape class, not once per
+  cell.  Nothing falls back to the per-step Python loop
   (:func:`repro.core.simulate.simulate_training_reference` survives only as
   the equivalence/benchmark baseline);
 * ``schedule``  — :func:`repro.core.schedule.simulate_schedule` (§VII
@@ -49,8 +53,12 @@ from repro.core.simulate import (
     PROBLEMS,
     SimCfg,
     TimelineCfg,
+    engine_cache_clear,
+    engine_cache_stats,
+    shape_class_key,
     simulate_timeline,
     simulate_training_batch,
+    simulate_training_classbatch,
     simulate_training_reference,
 )
 from repro.experiments.scenario import Scenario
@@ -372,6 +380,89 @@ def _agg(vals: list[float]) -> float:
     return float(np.mean(vals))
 
 
+# ---------------------------------------------------------------------------
+# Training substrate: shape-class batched execution (one compile per class).
+# ---------------------------------------------------------------------------
+
+
+def training_shape_key(s: Scenario) -> tuple:
+    """Hashable shape-class identity of a training-substrate cell.
+
+    Two scenarios with equal keys execute in ONE compiled
+    ``jit(vmap_cells(vmap_seeds(scan)))`` program: the key pins everything
+    that changes program *structure* — the engine statics
+    (:func:`repro.core.simulate.shape_class_key`: sync scheme, worker count,
+    steps, EF flag, compressor family fingerprint) plus the problem identity
+    (objective + its data seed), whose arrays are baked into the trace.
+    Values like lr / staleness / Local-H / compressor knobs / gradient noise
+    are traced per cell and deliberately absent."""
+    return shape_class_key(to_sim_cfg(s)) + (s.objective, s.seed)
+
+
+_PROBLEM_CACHE: dict[tuple, Any] = {}
+
+
+def _training_problem(s: Scenario):
+    """One problem instance per (objective, n_workers, seed) — shared across
+    the cells of a shape class so they can bake the same arrays.  The
+    factory noise is irrelevant here: the runner always traces each cell's
+    ``grad_noise`` through the problem's ``noise`` keyword."""
+    key = (s.objective, s.n_workers, s.seed)
+    if key not in _PROBLEM_CACHE:
+        if len(_PROBLEM_CACHE) > 32:
+            _PROBLEM_CACHE.pop(next(iter(_PROBLEM_CACHE)))
+        _PROBLEM_CACHE[key] = PROBLEMS[s.objective](
+            n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
+    return _PROBLEM_CACHE[key]
+
+
+def _run_training_scenarios(
+    scenarios: list[Scenario], *, replicas: int = 1, cache: bool = True
+) -> list[ScenarioResult]:
+    """Group the cells into shape classes and run each class as ONE compiled
+    program; results come back in input order.  ``cache=False`` forces a
+    fresh trace per call — the per-cell PR 2 baseline the sweep benchmark
+    measures against."""
+    for s in scenarios:
+        bad = s.violations("training")
+        if bad:
+            raise ValueError(f"invalid scenario {s.tag()} on training: {'; '.join(bad)}")
+    groups: dict[tuple, list[int]] = {}
+    for i, s in enumerate(scenarios):
+        groups.setdefault(training_shape_key(s), []).append(i)
+    results: list[ScenarioResult | None] = [None] * len(scenarios)
+    for key, idxs in groups.items():
+        cells = [scenarios[i] for i in idxs]
+        problem = _training_problem(cells[0])
+        outs = simulate_training_classbatch(
+            [to_sim_cfg(s) for s in cells],
+            problem,
+            seeds=[[s.seed + r for r in range(replicas)] for s in cells],
+            grad_noise=[s.grad_noise for s in cells],
+            problem_key=key,
+            cache=cache,
+        )
+        for i, s, cell in zip(idxs, cells, outs):
+            measured = {
+                "final_loss": _agg([float(o["loss"][-1]) for o in cell]),
+                "x_star_err": _agg([o["x_star_err"] for o in cell]),
+                "consensus": _agg([float(o["consensus"][-1]) for o in cell]),
+                "gbits": _agg([float(o["bits"][-1]) for o in cell]) / 1e9,
+            }
+            if replicas > 1:
+                measured["final_loss_std"] = float(
+                    np.std([float(o["loss"][-1]) for o in cell]))
+            series = {
+                "loss": np.stack([o["loss"] for o in cell]),
+                "consensus": np.stack([o["consensus"] for o in cell]),
+                "bits": np.stack([o["bits"] for o in cell]),
+            }
+            results[i] = ScenarioResult(s, "training", measured,
+                                        predict(s, "training"),
+                                        replicas=replicas, series=series)
+    return results  # type: ignore[return-value]
+
+
 def run_scenario(s: Scenario, substrate: str = "timeline", *, replicas: int = 1) -> ScenarioResult:
     """Execute one scenario; replica seeds are ``seed, seed+1, ...``."""
     bad = s.violations(substrate)
@@ -390,25 +481,9 @@ def run_scenario(s: Scenario, substrate: str = "timeline", *, replicas: int = 1)
 
     if substrate == "training":
         # every cell — any sync scheme, any compressor, EF on/off — runs all
-        # replica seeds in one jitted scan (no Python-loop fallback).
-        problem = PROBLEMS[s.objective](n_workers=s.n_workers, noise=s.grad_noise, seed=s.seed)
-        outs = simulate_training_batch(to_sim_cfg(s), problem, seeds=seeds)
-        measured = {
-            "final_loss": _agg([float(o["loss"][-1]) for o in outs]),
-            "x_star_err": _agg([o["x_star_err"] for o in outs]),
-            "consensus": _agg([float(o["consensus"][-1]) for o in outs]),
-            "gbits": _agg([float(o["bits"][-1]) for o in outs]) / 1e9,
-        }
-        if replicas > 1:
-            measured["final_loss_std"] = float(
-                np.std([float(o["loss"][-1]) for o in outs])
-            )
-        series = {
-            "loss": np.stack([o["loss"] for o in outs]),
-            "consensus": np.stack([o["consensus"] for o in outs]),
-            "bits": np.stack([o["bits"] for o in outs]),
-        }
-        return ScenarioResult(s, substrate, measured, pred, replicas=replicas, series=series)
+        # replica seeds in one jitted scan (no Python-loop fallback); sweeps
+        # go through run_scenarios, which batches whole shape classes.
+        return _run_training_scenarios([s], replicas=replicas)[0]
 
     if substrate == "schedule":
         r = simulate_schedule(
@@ -440,5 +515,99 @@ def run_scenarios(
     replicas: int = 1,
 ) -> list[ScenarioResult]:
     """Run every scenario, preserving order. Invalid cells raise — filter
-    with :func:`repro.experiments.scenario.expand` first."""
+    with :func:`repro.experiments.scenario.expand` first.
+
+    On the ``training`` substrate the list is grouped into shape classes
+    (:func:`training_shape_key`) and each class executes as ONE compiled
+    batched program — the sweep compiles once per class, not once per cell."""
+    if substrate == "training":
+        return _run_training_scenarios(list(scenarios), replicas=replicas)
     return [run_scenario(s, substrate, replicas=replicas) for s in scenarios]
+
+
+# ---------------------------------------------------------------------------
+# Batched-sweep speedup measurement (the BENCH_sweep.json record).
+# ---------------------------------------------------------------------------
+
+
+def sweep_matrix_45(*, steps: int = 60, n_workers: int = 8, seed: int = 0) -> list[Scenario]:
+    """The fixed 45-cell perf-tracking sweep: 5 sync/topology schemes x
+    3 quantization levels x 3 learning rates (qsgd+EF everywhere).  Exactly
+    5 shape classes — within a scheme the cells differ only in traced
+    values, so the batched engine compiles 5 programs where the per-cell
+    path compiles 45."""
+    cells = []
+    for sync, arch in (("bsp", "allreduce"), ("local", "allreduce"),
+                       ("ssp", "ps"), ("asp", "ps"), ("bsp", "gossip")):
+        for levels in (4, 8, 16):
+            for lr in (0.02, 0.05, 0.08):
+                cells.append(Scenario(
+                    sync=sync, arch=arch, n_workers=n_workers, steps=steps,
+                    lr=lr, staleness=4, local_steps=8, compressor="qsgd",
+                    compressor_kwargs={"levels": levels}, error_feedback=True,
+                    seed=seed))
+    return cells
+
+
+def measure_sweep_speedup(
+    scenarios: list[Scenario] | None = None,
+    *,
+    replicas: int = 1,
+    percell: bool = True,
+) -> dict[str, Any]:
+    """Wall-clock + compile count of the shape-class batched sweep vs the
+    per-cell PR 2 path (one fresh ``jit(vmap(scan))`` trace per cell) on the
+    same scenario list, plus the max deviation between the two result sets.
+    The acceptance record behind ``BENCH_sweep.json``."""
+    import time
+
+    scenarios = sweep_matrix_45() if scenarios is None else list(scenarios)
+    classes = {training_shape_key(s) for s in scenarios}
+
+    engine_cache_clear()
+    t0 = time.perf_counter()
+    batched = _run_training_scenarios(scenarios, replicas=replicas)
+    batched_s = time.perf_counter() - t0
+    st = engine_cache_stats()
+    compiles_batched = st.compiles
+
+    out: dict[str, Any] = {
+        "n_cells": len(scenarios),
+        "n_shape_classes": len(classes),
+        "replicas": replicas,
+        "steps": scenarios[0].steps,
+        "n_workers": scenarios[0].n_workers,
+        "compiles_batched": compiles_batched,
+        "batched_s": batched_s,
+        "cells_per_s_batched": len(scenarios) / batched_s,
+    }
+    if not percell:
+        return out
+
+    engine_cache_clear()
+    t0 = time.perf_counter()
+    percell_res = [
+        _run_training_scenarios([s], replicas=replicas, cache=False)[0]
+        for s in scenarios
+    ]
+    percell_s = time.perf_counter() - t0
+    compiles_percell = engine_cache_stats().compiles  # counters were cleared
+
+    dev_loss = max(
+        float(np.max(np.abs(b.series["loss"] - p.series["loss"])
+                     / np.maximum(np.abs(p.series["loss"]), 1e-6)))
+        for b, p in zip(batched, percell_res)
+    )
+    dev_bits = max(
+        float(np.max(np.abs(b.series["bits"] - p.series["bits"])
+                     / np.maximum(np.abs(p.series["bits"]), 1.0)))
+        for b, p in zip(batched, percell_res)
+    )
+    out.update({
+        "compiles_percell": compiles_percell,
+        "percell_s": percell_s,
+        "speedup": percell_s / batched_s,
+        "max_rel_dev_loss": dev_loss,
+        "max_rel_dev_bits": dev_bits,
+    })
+    return out

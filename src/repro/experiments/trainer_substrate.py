@@ -36,6 +36,24 @@ def to_comm_config(s: Scenario):
     )
 
 
+def select_trainer_device_count(
+    s: Scenario, n_devices: int, *, global_batch: int = 64
+) -> tuple[int | None, str]:
+    """Automated device-count selection for the ``--substrate trainer`` CLI
+    lane: the largest data-parallel mesh that (a) fits the available
+    devices, (b) does not exceed the scenario's worker count, and (c)
+    divides the tiny workload's global batch.  Returns ``(data_par, "")``
+    or ``(None, reason)`` when the cell must be skipped."""
+    bad = s.violations("trainer")
+    if bad:
+        return None, "; ".join(bad)
+    for dp in range(min(s.n_workers, n_devices), 1, -1):
+        if global_batch % dp == 0:
+            return dp, ""
+    return None, (f"needs a >=2-device mesh dividing batch {global_batch} "
+                  f"(have {n_devices} device(s))")
+
+
 def sync_rounds(s: Scenario, steps: int) -> int:
     """Parameter/gradient synchronization rounds a Scenario performs."""
     if s.sync == "local":
