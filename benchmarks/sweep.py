@@ -1,11 +1,14 @@
 """Shape-class batched sweep benchmark (the BENCH_sweep.json record).
 
 The 45-cell perf-tracking matrix (5 sync/topology schemes x 3 quantization
-levels x 3 learning rates, qsgd+EF) spans exactly 5 shape classes; the
-batched engine must compile once per class — not once per cell — and beat
-the per-cell PR 2 path by >= 5x wall-clock while reproducing its results to
-numerical tolerance.  Asserted here (``sweep/claims_validated``) and written
-to ``BENCH_sweep.json`` at the repo root for the across-PR trajectory.
+levels x 3 learning rates, qsgd+EF), replicated over 2 problem seeds (90
+cells over 2 distinct problem instances), spans exactly 5 shape classes —
+problem data (quadratic A/b, x*) is traced through the Problem protocol, so
+seed replicas share the class programs (10 compiles before data threading).  The batched engine must compile
+once per class — not once per cell — and beat the per-cell PR 2 path by
+>= 5x wall-clock while reproducing its results to numerical tolerance.
+Asserted here (``sweep/claims_validated``) and written to
+``BENCH_sweep.json`` at the repo root for the across-PR trajectory.
 
 ``run(no_speedup=True)`` (the ``--no-speedup`` aggregator flag) skips the
 expensive per-cell baseline and records only the batched numbers.
@@ -23,13 +26,19 @@ BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file
 
 
 def run(no_speedup: bool = False) -> list[Row]:
-    from repro.experiments.runner import measure_sweep_speedup
+    from repro.experiments.runner import measure_sweep_speedup, sweep_matrix_45
 
-    rec = measure_sweep_speedup(replicas=3, percell=not no_speedup)
+    # two problem seeds: 90 cells over 2 distinct problem instances still
+    # compile once per shape class (10 compiles before data threading) —
+    # problem data (A/b, x*) is traced
+    rec = measure_sweep_speedup(sweep_matrix_45(problem_seeds=(0, 1)),
+                                replicas=3, percell=not no_speedup)
     rows = [
         Row("sweep/shape_classes", 0.0,
-            f"{rec['n_cells']} cells -> {rec['n_shape_classes']} classes, "
-            f"{rec['compiles_batched']} compiles"),
+            f"{rec['n_cells']} cells ({rec['n_problem_instances']} problem "
+            f"instances) -> {rec['n_shape_classes']} classes "
+            f"(were {rec['n_classes_without_shared_problems']} before "
+            f"problem-data threading), {rec['compiles_batched']} compiles"),
         Row("sweep/batched", rec["batched_s"] * 1e6,
             f"{rec['cells_per_s_batched']:.1f} cells/s "
             f"({rec['n_cells']} cells x {rec['replicas']} replicas, "

@@ -1,21 +1,35 @@
 """End-to-end micro-training benchmark: per-step wall time of a reduced
 model under each taxonomy cell (the system-level counterpart of Table IV) +
-captured per-step collective wire bytes from the comms accounting."""
+per-step collective wire bytes from the bundle's build-time accounting
+artifact (``StepBundle.wire`` — exact even when the bundle registry serves
+a cached compile).
+
+With >= 2 devices (CI forces host devices) it also runs the fixed 8-cell
+trainer-lane acceptance sweep (2 sync schemes x 2 compressor families x
+2 knob values = 4 shape classes), asserting the bundle registry builds at
+most one bundle per class and that cache-reused steps reproduce per-cell
+built losses, and writes the wall-clock record to ``BENCH_trainer.json``
+at the repo root."""
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row
 from repro.configs import get_config
 from repro.configs.base import InputShape
-from repro.core import comms
 from repro.core.types import CommConfig
 from repro.data.pipeline import SyntheticBatches
 from repro.launch.mesh import make_test_mesh
 from repro.optim.optimizers import momentum_sgd
 from repro.train.steps import build_bundle
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_trainer.json")
 
 
 def run() -> list[Row]:
@@ -44,12 +58,11 @@ def run() -> list[Row]:
                                       error_feedback=True, bucket_mb=4)),
     ]
     for tag, comm in cells:
-        with comms.capture() as log:
-            bundle = build_bundle(cfg, mesh, comm, momentum_sgd(), shape)
-            state = bundle.init_state(params)
-            step = bundle.gossip_step if comm.aggregator == "gossip" else bundle.train_step
-            lr = jnp.asarray(0.05)
-            state, m = step(state, batch, lr)  # traced within capture
+        bundle = build_bundle(cfg, mesh, comm, momentum_sgd(), shape)
+        state = bundle.init_state(params)
+        step = bundle.gossip_step if comm.aggregator == "gossip" else bundle.train_step
+        lr = jnp.asarray(0.05)
+        state, m = step(state, batch, lr)  # compile
         jax.block_until_ready(m["loss"])
         import time as _time
 
@@ -59,6 +72,41 @@ def run() -> list[Row]:
             state, m = step(state, batch, lr)
         jax.block_until_ready(m["loss"])
         us = (_time.perf_counter() - t0) / reps * 1e6
-        wire = log.by_tag().get("grad_agg", 0.0) + log.by_tag().get("gossip_mix", 0.0)
+        wkey = "gossip" if comm.aggregator == "gossip" else "train"
+        by_tag = (bundle.wire or {}).get(wkey, {})
+        wire = by_tag.get("grad_agg", 0.0) + by_tag.get("gossip_mix", 0.0)
         rows.append(Row(f"train_micro/{tag}", us, f"agg_wire={wire/1e3:.1f}KB_per_step"))
+
+    rows.extend(_trainer_sweep_rows())
     return rows
+
+
+def _trainer_sweep_rows() -> list[Row]:
+    """The BENCH_trainer.json record: the 8-cell / 4-class acceptance sweep,
+    bundle builds vs per-cell rebuilds, on >= 2 forced host devices (the CI
+    smoke lane sets XLA_FLAGS); skipped with a note on a 1-device host."""
+    from repro.experiments.trainer_substrate import measure_trainer_sweep
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return [Row("train_micro/trainer_sweep", 0.0,
+                    "skipped: needs >=2 devices (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=4)")]
+
+    rec = measure_trainer_sweep()
+    # acceptance: <= one bundle build per shape class, per-cell losses
+    # reproduced by the cache-reused compiled steps
+    assert rec["builds_shared"] <= rec["n_shape_classes"], rec
+    assert rec["builds_percell"] == rec["n_cells"], rec
+    assert rec["max_rel_dev_loss"] < 1e-5, rec
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    return [
+        Row("train_micro/trainer_sweep", rec["shared_s"] * 1e6,
+            f"{rec['n_cells']} cells -> {rec['n_shape_classes']} classes, "
+            f"{rec['builds_shared']} builds ({rec['cache_hits']} hits)"),
+        Row("train_micro/trainer_sweep_speedup", rec["percell_s"] * 1e6,
+            f"{rec['speedup']:.1f}x over {rec['builds_percell']} per-cell "
+            f"builds; max dev loss={rec['max_rel_dev_loss']:.1e}"),
+        Row("train_micro/claims_validated", 0.0, True),
+    ]

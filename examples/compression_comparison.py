@@ -12,13 +12,15 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
 
 from repro.experiments import Scenario
-from repro.experiments.trainer_substrate import run_trainer_scenario
+from repro.experiments.trainer_substrate import run_trainer_sweep
+from repro.train.steps import bundle_cache_stats
 
 STEPS = 120
 BASE = dict(n_workers=4, steps=STEPS)
 
 CELLS = [
     ("dense_bsp        (32 bit)", Scenario(lr=0.3, **BASE)),
+    ("qsgd s=4         (~3 bit)", Scenario(compressor="qsgd", compressor_kwargs={"levels": 4}, lr=0.3, **BASE)),
     ("qsgd s=16        (~5 bit)", Scenario(compressor="qsgd", compressor_kwargs={"levels": 16}, lr=0.3, **BASE)),
     ("terngrad         (~2 bit)", Scenario(compressor="terngrad", compressor_kwargs={"clip_sigma": 2.5}, lr=0.1, **BASE)),
     ("signsgd majority (1 bit) ", Scenario(compressor="signsgd", lr=0.02, **BASE)),
@@ -29,11 +31,15 @@ CELLS = [
 
 
 def main():
+    # one shape-class-grouped sweep over the real mesh: the two qsgd cells
+    # differ only in the traced `levels` knob and share one compiled bundle
+    results, _ = run_trainer_sweep([s for _, s in CELLS], data_par=4, model_par=2)
     print(f"{'scheme':28s} {'final loss':>10s} {'agg wire/step':>14s}")
-    for name, scenario in CELLS:
-        res = run_trainer_scenario(scenario, data_par=4, model_par=2)
+    for (name, _), res in zip(CELLS, results):
         print(f"{name:28s} {res.measured['final_loss']:10.4f} "
               f"{res.measured['wire_kb_per_step']:11.1f}KB")
+    st = bundle_cache_stats()
+    print(f"bundle builds: {st.builds} for {len(CELLS)} cells ({st.hits} cache hits)")
     print("COMPARISON OK")
 
 

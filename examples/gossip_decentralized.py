@@ -11,7 +11,8 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
 
 from repro.experiments import Scenario
-from repro.experiments.trainer_substrate import run_trainer_scenario
+from repro.experiments.trainer_substrate import run_trainer_sweep
+from repro.train.steps import bundle_cache_stats
 
 BASE = dict(n_workers=8, steps=120, lr=0.2)
 
@@ -25,9 +26,11 @@ RUNS = [
 
 
 def main():
-    for name, scenario in RUNS:
-        res = run_trainer_scenario(scenario, momentum=0.9, log_every=30)
+    results, _ = run_trainer_sweep([s for _, s in RUNS], momentum=0.9, log_every=30)
+    for (name, _), res in zip(RUNS, results):
         print(f"{name:22s} loss: " + " -> ".join(f"{l:.3f}" for l in res.series["loss"]))
+    st = bundle_cache_stats()
+    print(f"bundle builds: {st.builds} for {len(RUNS)} cells ({st.hits} cache hits)")
     print("GOSSIP OK")
 
 

@@ -11,7 +11,8 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
     os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
 
 from repro.experiments import Scenario
-from repro.experiments.trainer_substrate import run_trainer_scenario
+from repro.experiments.trainer_substrate import run_trainer_sweep
+from repro.train.steps import bundle_cache_stats
 
 STEPS = 160
 BASE = dict(n_workers=8, steps=STEPS, lr=0.15)
@@ -26,11 +27,15 @@ RUNS = [
 
 
 def main():
+    # one shape-class-grouped sweep: H=4 and H=16 share a compiled bundle
+    # (H is a Python-level trainer decision, not program structure)
+    results, _ = run_trainer_sweep([s for _, s in RUNS])
     print(f"{'scheme':28s} {'final loss':>10s} {'sync rounds':>12s}")
-    for name, scenario in RUNS:
-        res = run_trainer_scenario(scenario)
+    for (name, _), res in zip(RUNS, results):
         print(f"{name:28s} {res.measured['final_loss']:10.4f} "
               f"{int(res.measured['sync_rounds']):12d}")
+    st = bundle_cache_stats()
+    print(f"bundle builds: {st.builds} for {len(RUNS)} cells ({st.hits} cache hits)")
     print("LOCAL-SGD OK")
 
 

@@ -27,7 +27,14 @@ import numpy as np
 from repro.compat import axis_size as compat_axis_size
 
 from repro.core import collectives, comms, feedback
-from repro.core.compression.base import Compressed, get_compressor
+from repro.core.compression.base import (
+    Compressed,
+    compress_p,
+    decompress_p,
+    get_compressor,
+    runtime_knob_values,
+    runtime_knobs,
+)
 from repro.core.types import CommConfig
 
 f32 = jnp.float32
@@ -49,6 +56,25 @@ class BucketPlan:
 
     def compressor(self, b: Bucket):
         return get_compressor(b.compressor_name, **dict(b.compressor_kwargs))
+
+    def knob_values(self) -> tuple[dict, ...]:
+        """Per-bucket runtime-traceable compressor knob values — the ``comp``
+        half of :class:`repro.core.types.CommKnobs`."""
+        return tuple(runtime_knob_values(self.compressor(b)) for b in self.buckets)
+
+
+def plan_signature(plan: BucketPlan) -> tuple:
+    """Hashable structural identity of a plan: segment layout plus the
+    compressor family per bucket with runtime-traceable knob values REMOVED.
+    Part of the bundle-cache key — two cells whose plans differ only in
+    traced knob values (qsgd levels, terngrad clip) share compiled steps."""
+    out = []
+    for b in plan.buckets:
+        comp = plan.compressor(b)
+        traced = set(runtime_knobs(comp))
+        static_kw = tuple(kv for kv in b.compressor_kwargs if kv[0] not in traced)
+        out.append((b.name, b.segments, b.size, b.compressor_name, static_kw))
+    return tuple(out)
 
 
 def _rule_for(comm: CommConfig, path: str) -> tuple[str, dict]:
@@ -156,8 +182,11 @@ def _aggregate_one(
     key: jax.Array,
     a: jax.Array,
     axes: tuple[str, ...],
+    p: dict | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (aggregated mean, self decompressed C(a) for the EF update)."""
+    """Returns (aggregated mean, self decompressed C(a) for the EF update).
+    ``p`` carries the bucket's *traced* runtime knob values (qsgd levels,
+    terngrad clip, ...) so shape-class cells share one compiled program."""
     n_workers = 1
     for axn in axes:
         n_workers *= compat_axis_size(axn)
@@ -170,8 +199,8 @@ def _aggregate_one(
             agg = collectives.allreduce(a, axes, impl=comm.collective) / n_workers
         return agg, a
 
-    c = compressor.compress(key, a)
-    self_hat = compressor.decompress(c)
+    c = compress_p(compressor, key, a, p)
+    self_hat = decompress_p(compressor, c, p)
     mode = compressor.reduce_mode
 
     if mode == "majority":
@@ -190,7 +219,7 @@ def _aggregate_one(
         else:
             def body(w, acc):
                 pw = {k: jax.lax.dynamic_index_in_dim(v, w, 0, keepdims=False) for k, v in gathered.items()}
-                return acc + compressor.decompress(Compressed(pw, c.n))
+                return acc + decompress_p(compressor, Compressed(pw, c.n), p)
 
             agg = jax.lax.fori_loop(0, n_workers, body, jnp.zeros((c.n,), f32)) / n_workers
 
@@ -209,8 +238,14 @@ def aggregate_gradients(
     comm_state: dict[str, Any],
     key: jax.Array,
     axes: tuple[str, ...],
+    knobs: dict[str, Any] | None = None,
 ) -> tuple[Any, dict[str, Any]]:
-    """The full §II pipeline over a gradient pytree. Functional state update."""
+    """The full §II pipeline over a gradient pytree. Functional state update.
+
+    ``knobs`` is the traced :class:`repro.core.types.CommKnobs` tree of the
+    cell (``knobs["comp"][i]`` per bucket, plus ef_decay / momentum /
+    local_clip scalars); without it every value bakes from ``comm`` as
+    before — the two paths compute identically."""
     leaves, treedef = jax.tree.flatten(grads)
     bufs = _gather_buckets(plan, leaves)
     n_workers = 1
@@ -236,7 +271,7 @@ def aggregate_gradients(
     with comms.tag("grad_agg"):
         for i, (b, g) in enumerate(zip(plan.buckets, bufs)):
             compressor = plan.compressor(b)
-            a = feedback.pre_compress(comm, g, state, i, n_workers)
+            a = feedback.pre_compress(comm, g, state, i, n_workers, knobs=knobs)
             if getattr(compressor, "reduce_mode", "") == "powersgd":
                 agg, q_new = _powersgd_aggregate(
                     compressor, a, state["psgd_q"][i], axes, n_workers
@@ -245,7 +280,8 @@ def aggregate_gradients(
                 self_hat = agg  # per-worker EF vs the GLOBAL approximation
             else:
                 agg, self_hat = _aggregate_one(
-                    comm, compressor, jax.random.fold_in(key, i), a, axes
+                    comm, compressor, jax.random.fold_in(key, i), a, axes,
+                    knobs["comp"][i] if knobs is not None else None,
                 )
             if compressor is not None:
                 feedback.post_compress(comm, a, self_hat, state, i)

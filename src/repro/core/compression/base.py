@@ -158,6 +158,69 @@ def batch_knobs(comp) -> tuple[str, ...]:
     return tuple(getattr(comp, "BATCH_KNOBS", ()))
 
 
+# ---------------------------------------------------------------------------
+# Runtime (payload-materializing) knob protocol — the mesh-trainer analogue
+# of BATCH_KNOBS.  The simulator never builds the wire payload, so ANY value
+# knob can be traced through ``roundtrip_p``; the runtime aggregation layer
+# DOES materialize payload arrays, so only knobs that leave every payload
+# shape unchanged can be traced there.  Quantizer levels/clip qualify; top-k
+# style element counts (payload is (values, indices) of size k) and Pallas
+# kernel constants do not — they stay in the runtime fingerprint and force a
+# separate bundle.  Classes opt in with ``RUNTIME_KNOBS`` plus
+# ``compress_p(key, x, p)`` / ``decompress_p(c, p)``.
+# ---------------------------------------------------------------------------
+
+
+def runtime_knobs(comp) -> tuple[str, ...]:
+    """Knob names traceable at the runtime layer (payload-shape-invariant)."""
+    return tuple(getattr(comp, "RUNTIME_KNOBS", ()))
+
+
+def runtime_knob_values(comp) -> dict[str, float]:
+    """Traced runtime knob values of one cell, keyed for ``compress_p``.
+    Classes may override ``runtime_params()`` to validate (qsgd's int8
+    range); the default reads ``RUNTIME_KNOBS`` attributes verbatim."""
+    if comp is None:
+        return {}
+    fn = getattr(comp, "runtime_params", None)
+    if fn is not None:
+        return {k: float(v) for k, v in fn().items()}
+    return {k: float(getattr(comp, k)) for k in runtime_knobs(comp)}
+
+
+def runtime_fingerprint(comp) -> tuple:
+    """Hashable runtime-layer program identity of the compressor: the class
+    plus every dataclass field that is NOT a runtime-traceable knob.  The
+    runtime counterpart of :func:`shape_fingerprint` — stricter, because
+    payload-shaping knobs (top-k's k) are structural here."""
+    if comp is None:
+        return ("dense",)
+    knobs = set(runtime_knobs(comp))
+    static = tuple(
+        (f.name, getattr(comp, f.name))
+        for f in dataclasses.fields(comp)
+        if f.name not in knobs
+    )
+    return (type(comp).__name__,) + static
+
+
+def compress_p(comp, key: jax.Array, x: jax.Array, p: dict | None) -> Compressed:
+    """Compress with *traced* runtime knob values ``p``; falls back to the
+    plain ``compress`` (knob values baked) when the class defines no
+    runtime path or no knobs were supplied."""
+    fn = getattr(comp, "compress_p", None)
+    if fn is not None and p:
+        return fn(key, x, p)
+    return comp.compress(key, x)
+
+
+def decompress_p(comp, c: Compressed, p: dict | None) -> jax.Array:
+    fn = getattr(comp, "decompress_p", None)
+    if fn is not None and p:
+        return fn(c, p)
+    return comp.decompress(c)
+
+
 def batch_param_values(comp, dim: int) -> dict[str, float]:
     """The traced knob values of one cell, keyed for ``roundtrip_p``.
 

@@ -54,6 +54,18 @@ class TernGrad:
     reduce_mode: str = "none"
     clip_sigma: float = 0.0  # optional gradient clipping (paper §V TernGrad)
     BATCH_KNOBS = ("clip_sigma",)
+    #: clip_sigma only rescales values — the (tern, scale) payload keeps its
+    #: shape, so the runtime layer can trace it too
+    RUNTIME_KNOBS = ("clip_sigma",)
+
+    def compress_p(self, key, x, p) -> Compressed:
+        cs = p.get("clip_sigma", self.clip_sigma)
+        sig = jnp.std(x)
+        x = jnp.where(cs > 0, jnp.clip(x, -cs * sig, cs * sig), x)
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+        b = (jax.random.uniform(key, x.shape) < jnp.abs(x) / s).astype(jnp.int8)
+        tern = (jnp.sign(x).astype(jnp.int8) * b).astype(jnp.int8)
+        return Compressed({"tern": tern, "scale": s[None]}, x.size)
 
     def roundtrip_p(self, key, x, p):
         cs = p.get("clip_sigma", self.clip_sigma)
@@ -64,14 +76,7 @@ class TernGrad:
         return jnp.sign(x) * b * s, jnp.asarray(x.size * 2.0 + 32, f32)
 
     def compress(self, key, x) -> Compressed:
-        if self.clip_sigma:
-            sig = jnp.std(x)
-            x = jnp.clip(x, -self.clip_sigma * sig, self.clip_sigma * sig)
-        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
-        p = jnp.abs(x) / s
-        b = (jax.random.uniform(key, x.shape) < p).astype(jnp.int8)
-        tern = (jnp.sign(x).astype(jnp.int8) * b).astype(jnp.int8)
-        return Compressed({"tern": tern, "scale": s[None]}, x.size)
+        return self.compress_p(key, x, {})
 
     def decompress(self, c) -> jax.Array:
         return c.payload["tern"].astype(f32) * c.payload["scale"][0]
@@ -89,6 +94,9 @@ class QSGD:
     unbiased: bool = True
     reduce_mode: str = "none"
     BATCH_KNOBS = ("levels",)
+    #: levels only rescales the int8 codes — payload shape is knob-free, so
+    #: the runtime aggregation layer traces it too (one bundle per family)
+    RUNTIME_KNOBS = ("levels",)
 
     def batch_params(self, dim: int) -> dict:
         # the int8 wire format caps |code| at s; past 127 compress() would
@@ -97,6 +105,27 @@ class QSGD:
             raise ValueError(f"qsgd levels={self.levels} exceeds the int8 "
                              "wire format (max 127)")
         return {"levels": self.levels}
+
+    def runtime_params(self) -> dict:
+        if self.levels > 127:
+            raise ValueError(f"qsgd levels={self.levels} exceeds the int8 "
+                             "wire format (max 127)")
+        return {"levels": self.levels}
+
+    def compress_p(self, key, x, p) -> Compressed:
+        s = jnp.asarray(p.get("levels", self.levels), f32)
+        norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)
+        y = jnp.abs(x) / norm * s
+        l = jnp.floor(y)
+        l = l + (jax.random.uniform(key, x.shape) < y - l)
+        code = (jnp.sign(x) * l).astype(jnp.int8)  # |l| <= s <= 127
+        # levels rides along as a 1-element payload entry so decompress_p
+        # needs no side channel (32 bits, matching the analytic "+32" term)
+        return Compressed({"code": code, "norm": norm[None], "s": s[None].astype(f32)}, x.size)
+
+    def decompress_p(self, c, p) -> jax.Array:
+        s = c.payload["s"][0] if "s" in c.payload else p.get("levels", 1.0 * self.levels)
+        return c.payload["code"].astype(f32) / s * c.payload["norm"][0]
 
     def roundtrip_p(self, key, x, p):
         s = p.get("levels", 1.0 * self.levels)
@@ -188,6 +217,31 @@ class NaturalDithering:
     unbiased: bool = True
     reduce_mode: str = "none"
     BATCH_KNOBS = ("levels",)
+    RUNTIME_KNOBS = ("levels",)
+
+    def compress_p(self, key, x, p) -> Compressed:
+        L = jnp.asarray(p.get("levels", self.levels), f32)
+        norm = jnp.maximum(jnp.linalg.norm(x), 1e-30)
+        y = jnp.abs(x) / norm
+        ymin = 2.0 ** -(L - 1)
+        e = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(y, ymin))), -(L - 1), 0)
+        hi = jnp.exp2(e)
+        lo = hi / 2
+        small = y < ymin
+        p_hi = jnp.where(small, y / ymin, (y - lo) / jnp.maximum(hi - lo, 1e-30))
+        take_hi = jax.random.uniform(key, x.shape) < p_hi
+        ZERO = -L  # sentinel: decodes to 0
+        code = jnp.clip(jnp.where(take_hi, e, jnp.where(small, ZERO, e - 1)), ZERO, 0)
+        sign = jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+        return Compressed({"exp": code.astype(jnp.int8), "sign": sign,
+                           "norm": norm[None], "L": L[None]}, x.size)
+
+    def decompress_p(self, c, p) -> jax.Array:
+        L = c.payload["L"][0] if "L" in c.payload else jnp.asarray(
+            p.get("levels", self.levels), f32)
+        e = c.payload["exp"].astype(f32)
+        mag = jnp.where(e <= -L, 0.0, jnp.exp2(e))
+        return c.payload["sign"].astype(f32) * mag * c.payload["norm"][0]
 
     def roundtrip_p(self, key, x, p):
         L = p.get("levels", 1.0 * self.levels)

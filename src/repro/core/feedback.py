@@ -30,10 +30,12 @@ def init_comm_state(comm: CommConfig, flat_template: list[jax.Array]) -> dict[st
     return state
 
 
-def local_clip(g: jax.Array, thr: float, n_workers: int) -> jax.Array:
+def local_clip(g: jax.Array, thr, n_workers: int) -> jax.Array:
     """Local Gradient Clipping [25] (§IX-C): each worker clips at
-    thr / sqrt(N) so the aggregated gradient keeps the global threshold."""
-    if not thr:
+    thr / sqrt(N) so the aggregated gradient keeps the global threshold.
+    ``thr`` may be a traced scalar (the bundle-cache knob path); only a
+    *static* zero short-circuits."""
+    if isinstance(thr, (int, float)) and not thr:
         return g
     local_thr = thr * (n_workers ** -0.5)
     norm = jnp.linalg.norm(g)
@@ -58,16 +60,26 @@ def pre_compress(
     state: dict[str, Any],
     idx: int,
     n_workers: int,
+    knobs: dict[str, Any] | None = None,
 ) -> jax.Array:
     """Momentum correction + EF accumulation + local clipping (order per
-    DGC [25]): returns the vector handed to the compressor."""
+    DGC [25]): returns the vector handed to the compressor.
+
+    The on/off *flags* come from ``comm`` (structural — they decide which
+    state buffers exist); the coefficients come from the traced ``knobs``
+    tree when given, so cells differing only in momentum / clip / EF-decay
+    values share one compiled program."""
     if comm.momentum_correction:
-        u = comm.momentum_correction * state["u"][idx] + g
+        m = knobs["momentum"] if knobs is not None else comm.momentum_correction
+        u = m * state["u"][idx] + g
         state["u"][idx] = u
         g = u
-    g = local_clip(g, comm.local_clip, n_workers)
+    if comm.local_clip:
+        thr = knobs["local_clip"] if knobs is not None else comm.local_clip
+        g = local_clip(g, thr, n_workers)
     if comm.error_feedback:
-        g = state["ef"][idx] * comm.ef_decay + g
+        decay = knobs["ef_decay"] if knobs is not None else comm.ef_decay
+        g = state["ef"][idx] * decay + g
     return g
 
 

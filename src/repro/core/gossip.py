@@ -81,8 +81,10 @@ def _neighbor_sum(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
     return comms.ppermute(x, axis, right) + comms.ppermute(x, axis, left)
 
 
-def dpsgd_mix(params_flat: list[jax.Array], axes: tuple[str, ...], w: float = 1.0 / 3.0):
-    """D-PSGD [51]: x_i <- (1-2w) x_i + w (x_left + x_right)."""
+def dpsgd_mix(params_flat: list[jax.Array], axes: tuple[str, ...], w=1.0 / 3.0):
+    """D-PSGD [51]: x_i <- (1-2w) x_i + w (x_left + x_right).  ``w`` may be a
+    *traced* scalar (the ``gossip_w`` knob) — the wire cost is w-independent,
+    so every mixing weight shares one compiled program."""
     return [(1 - 2 * w) * p + w * _neighbor_sum(p, axes) for p in params_flat]
 
 
@@ -109,17 +111,27 @@ def choco_mix(
     params_flat: list[jax.Array],
     st: ChocoState,
     axes: tuple[str, ...],
-    w: float = 1.0 / 3.0,
+    w=1.0 / 3.0,
+    *,
+    gamma=None,
+    comp_knobs: tuple[dict, ...] | None = None,
 ) -> tuple[list[jax.Array], ChocoState]:
     """One CHOCO-SGD communication round: exchange q = C(x - x_hat) with ring
-    neighbors; supports *biased* compressors (the method's point)."""
-    gamma = comm.gossip_step_size
+    neighbors; supports *biased* compressors (the method's point).
+
+    ``gamma`` (CHOCO step size), ``w`` (ring weight) and ``comp_knobs`` (one
+    traced knob dict per bucket) may all be traced scalars — cells differing
+    only in these values share one compiled gossip step."""
+    from repro.core.compression.base import compress_p, decompress_p
+
+    gamma = comm.gossip_step_size if gamma is None else gamma
     new_x, new_hat, new_nbr = [], [], []
     for i, (p, xh, xn) in enumerate(zip(params_flat, st.x_hat, st.x_hat_nbr)):
-        c = compressor.compress(jax.random.fold_in(key, i), (p - xh).reshape(-1))
-        q_self = compressor.decompress(c).reshape(p.shape)
+        kn = comp_knobs[i] if comp_knobs is not None else None
+        c = compress_p(compressor, jax.random.fold_in(key, i), (p - xh).reshape(-1), kn)
+        q_self = decompress_p(compressor, c, kn).reshape(p.shape)
         # send the *payload* to both neighbors (wire = compressed)
-        q_nbr = _neighbor_sum_payload(compressor, c, axes).reshape(p.shape)
+        q_nbr = _neighbor_sum_payload(compressor, c, axes, kn).reshape(p.shape)
         xh2 = xh + q_self
         xn2 = xn + q_nbr
         # x <- x + gamma * (sum_j w_ij xhat_j - xhat_i); ring: w on each nbr
@@ -130,9 +142,14 @@ def choco_mix(
     return new_x, ChocoState(new_hat, new_nbr)
 
 
-def _neighbor_sum_payload(compressor, c: Compressed, axes: tuple[str, ...]) -> jax.Array:
+def _neighbor_sum_payload(
+    compressor, c: Compressed, axes: tuple[str, ...],
+    comp_knobs: dict | None = None,
+) -> jax.Array:
     """Sum of both neighbors' decompressed payloads, exchanging only the
     compressed wire format."""
+    from repro.core.compression.base import decompress_p
+
     axis = axes[-1]
     n = compat_axis_size(axis)
     right = [(j, (j + 1) % n) for j in range(n)]
@@ -140,6 +157,6 @@ def _neighbor_sum_payload(compressor, c: Compressed, axes: tuple[str, ...]) -> j
     total = None
     for perm in (right, left):
         payload = {k: comms.ppermute(v, axis, perm) for k, v in c.payload.items()}
-        dec = compressor.decompress(Compressed(payload, c.n))
+        dec = decompress_p(compressor, Compressed(payload, c.n), comp_knobs)
         total = dec if total is None else total + dec
     return total

@@ -209,6 +209,35 @@ class SimCfg:
     gossip_w: float = 1.0 / 3.0
 
 
+class Problem(tuple):
+    """A ``(grad, loss, x0, x_star)`` 4-tuple (unpacks everywhere the plain
+    tuple did) that additionally exposes its seed-dependent arrays as a
+    *traced-data* pytree:
+
+    * ``data`` — every array drawn from the problem seed (including
+      ``x_star``); the batched engine passes it as a traced argument, so
+      cells that differ ONLY in problem seed share one compiled program
+      (``grad(..., data=...)`` / ``loss(x, data=...)`` read from it);
+    * ``data_key`` — hashable structural identity (objective family +
+      shapes) of the program the problem yields: the compiled-program cache
+      key, replacing the old per-instance ``id(problem)`` pin;
+    * ``noise`` — the factory's baked gradient-noise scale, part of the
+      cache key when a cell does NOT trace ``grad_noise``.
+    """
+
+    data: dict | None
+    data_key: tuple | None
+    noise: float
+
+    def __new__(cls, grad, loss, x0, x_star, *, data=None, data_key=None,
+                noise=0.0):
+        obj = super().__new__(cls, (grad, loss, x0, x_star))
+        obj.data = data
+        obj.data_key = data_key
+        obj.noise = noise
+        return obj
+
+
 def quadratic_problem(dim: int = 64, n_workers: int = 8, noise: float = 0.1, seed: int = 0):
     """f_i(x) = 1/2 (x-b_i)^T A (x-b_i): strongly convex with worker
     heterogeneity; f* and x* known in closed form."""
@@ -218,16 +247,20 @@ def quadratic_problem(dim: int = 64, n_workers: int = 8, noise: float = 0.1, see
     A = jnp.asarray(Q @ np.diag(evals) @ Q.T, f32)
     b = jnp.asarray(rng.normal(size=(n_workers, dim)) * 1.0, f32)
 
-    def grad(x, i, key, noise=noise):
-        g = A @ (x - b[i])
+    def grad(x, i, key, noise=noise, data=None):
+        A_, b_ = (data["A"], data["b"]) if data is not None else (A, b)
+        g = A_ @ (x - b_[i])
         return g + noise * jax.random.normal(key, x.shape)
 
-    def loss(x):
-        d = x[None, :] - b
-        return 0.5 * jnp.mean(jnp.einsum("nd,de,ne->n", d, A, d))
+    def loss(x, data=None):
+        A_, b_ = (data["A"], data["b"]) if data is not None else (A, b)
+        d = x[None, :] - b_
+        return 0.5 * jnp.mean(jnp.einsum("nd,de,ne->n", d, A_, d))
 
     x_star = jnp.mean(b, axis=0)
-    return grad, loss, jnp.zeros((dim,), f32), x_star
+    return Problem(grad, loss, jnp.zeros((dim,), f32), x_star,
+                   data={"A": A, "b": b, "x_star": x_star},
+                   data_key=("quadratic", dim, n_workers), noise=noise)
 
 
 def logistic_problem(dim: int = 32, n_workers: int = 8, n_samples: int = 64,
@@ -243,21 +276,25 @@ def logistic_problem(dim: int = 32, n_workers: int = 8, n_samples: int = 64,
     labels = jnp.asarray((logits + rng.logistic(size=logits.shape) > 0).astype(np.float32))
     lam = 1e-2
 
-    def _loss_one(x, i):
-        z = feats[i] @ x
-        return jnp.mean(jnp.logaddexp(0.0, z) - labels[i] * z) + 0.5 * lam * jnp.sum(x * x)
+    def _loss_one(x, i, feats_, labels_):
+        z = feats_[i] @ x
+        return jnp.mean(jnp.logaddexp(0.0, z) - labels_[i] * z) + 0.5 * lam * jnp.sum(x * x)
 
-    def grad(x, i, key, noise=noise):
-        g = jax.grad(_loss_one)(x, i)
+    def grad(x, i, key, noise=noise, data=None):
+        f_, l_ = (data["feats"], data["labels"]) if data is not None else (feats, labels)
+        g = jax.grad(_loss_one)(x, i, f_, l_)
         return g + noise * jax.random.normal(key, x.shape)
 
-    def loss(x):
-        return jnp.mean(jnp.stack([_loss_one(x, i) for i in range(n_workers)]))
+    def loss(x, data=None):
+        f_, l_ = (data["feats"], data["labels"]) if data is not None else (feats, labels)
+        return jnp.mean(jnp.stack([_loss_one(x, i, f_, l_) for i in range(n_workers)]))
 
     x0 = jnp.zeros((dim,), f32)
     # x* has no closed form; report distance to the heterogeneity-free truth
     x_star = jnp.asarray(w_true, f32)
-    return grad, loss, x0, x_star
+    return Problem(grad, loss, x0, x_star,
+                   data={"feats": feats, "labels": labels, "x_star": x_star},
+                   data_key=("logistic", dim, n_workers, n_samples), noise=noise)
 
 
 PROBLEMS = {
@@ -378,15 +415,19 @@ def shape_class_key(cfg: SimCfg) -> tuple:
 
 
 def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
-    """The parameterized scan: ``replica_fn(p, seed_key)`` where ``p`` is a
-    CellParams tree of *traced* scalars.  Workers are vmapped inside the
-    step; the caller vmaps replica seeds and (for a class batch) cells.
+    """The parameterized scan: ``replica_fn(p, seed_key, data)`` where ``p``
+    is a CellParams tree of *traced* scalars and ``data`` is the problem's
+    traced-data pytree (``None`` for legacy problems, whose arrays stay
+    baked into the trace).  Workers are vmapped inside the step; the caller
+    vmaps replica seeds and (for a class batch) cells — with per-cell
+    ``data``, cells differing only in problem seed share the program.
     The carry is ``(X, ef, delay_buf, key, total_bits)``; wire bits are
     accumulated in-scan from the compressor roundtrip — data-dependent
     (threshold-style) payloads charge their *measured* size."""
     from repro.core.compression.base import roundtrip_bits, roundtrip_bits_ef
 
-    grad_fn, loss_fn, x0, x_star = problem
+    grad_fn, loss_fn, x0, x_star0 = problem
+    has_data = getattr(problem, "data", None) is not None
     n, dim = spec.n_workers, x0.size
     sync = spec.sync
     widx = jnp.arange(n)
@@ -395,9 +436,11 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
             "traced grad noise requires a problem whose grad accepts a "
             "`noise` keyword (both built-in problems do)")
 
-    def replica_fn(p: dict, seed_key):
+    def replica_fn(p: dict, seed_key, data=None):
         lr = p["lr"]
         cp = p["comp"]
+        loss_fn_ = (lambda x: loss_fn(x, data=data)) if has_data else loss_fn
+        x_star = data["x_star"] if has_data else x_star0
         if sync == "gossip":
             from repro.core.gossip import ring_mixing_matrix_traced
 
@@ -407,11 +450,12 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
         d_idx = jnp.mod(widx, p["staleness"] + 1)
 
         def grad_all(X, gkeys):
+            kw = {"data": data} if has_data else {}
             if spec.traced_noise:
                 return jax.vmap(
-                    lambda x, i, k: grad_fn(x, i, k, noise=p["grad_noise"])
+                    lambda x, i, k: grad_fn(x, i, k, noise=p["grad_noise"], **kw)
                 )(X, widx, gkeys)
-            return jax.vmap(grad_fn)(X, widx, gkeys)
+            return jax.vmap(lambda x, i, k: grad_fn(x, i, k, **kw))(X, widx, gkeys)
 
         def apply_compression(ckeys, G, ef):
             """Compress every worker's (effective) gradient; returns the
@@ -463,7 +507,7 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                     total_bits = total_bits + round_bits
             xbar = jnp.mean(X, axis=0)
             out = (
-                loss_fn(xbar),
+                loss_fn_(xbar),
                 jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1)),
                 total_bits,
             )
@@ -516,6 +560,7 @@ def simulate_training_classbatch(
     cfgs: list[SimCfg],
     problem=None,
     *,
+    problems: list | None = None,
     seeds: list[list[int]] | None = None,
     grad_noise: list[float] | None = None,
     problem_key=None,
@@ -524,13 +569,23 @@ def simulate_training_classbatch(
     """Run EVERY cell of one shape class (x its replica seeds) in a single
     compiled program: ``jit(vmap_cells(vmap_seeds(scan)))``.
 
-    All ``cfgs`` must share :func:`shape_class_key` and the ONE ``problem``
-    instance (its arrays are baked into the program); their value knobs are
-    stacked into a CellParams tree and traced.  ``seeds`` is a per-cell list
-    of replica seeds (equal length per cell; default ``[[cfg.seed]]``);
-    ``grad_noise`` optionally traces a per-cell gradient-noise scale through
-    the problem's ``noise`` keyword.  ``problem_key`` is a hashable identity
-    for the program cache (defaults to ``id(problem)``, pinned); pass
+    All ``cfgs`` must share :func:`shape_class_key`; their value knobs are
+    stacked into a CellParams tree and traced.  The problem comes in two
+    forms:
+
+    * ``problem`` — ONE instance for every cell.  :class:`Problem`
+      instances thread their ``data`` pytree (A/b, X/y, x*) as a traced
+      argument and cache the program under the structural ``data_key``;
+      legacy 4-tuples bake their arrays and cache under ``problem_key``
+      (default ``id(problem)``, pinned).
+    * ``problems`` — one :class:`Problem` PER CELL (equal ``data_key``):
+      each cell's data is stacked over the cell axis and traced, so cells
+      that differ only in problem seed share the one compiled program.
+
+    ``seeds`` is a per-cell list of replica seeds (equal length per cell;
+    default ``[[cfg.seed]]``); ``grad_noise`` optionally traces a per-cell
+    gradient-noise scale through the problem's ``noise`` keyword (required
+    when per-cell problems were built with differing factory noise); pass
     ``cache=False`` to force a fresh trace (the per-cell PR 2 baseline the
     sweep benchmark compares against).
 
@@ -545,13 +600,18 @@ def simulate_training_classbatch(
         raise ValueError(
             f"cfgs span {len(keys)} shape classes ({sorted(map(str, keys))}); "
             "group with shape_class_key() first")
+    if problems is not None:
+        if len(problems) != len(cfgs):
+            raise ValueError("problems must give one Problem per cfg")
+        dkeys = {getattr(p, "data_key", None) for p in problems}
+        if None in dkeys or len(dkeys) > 1:
+            raise ValueError(
+                "per-cell problems must be Problem instances sharing one "
+                f"data_key (got {sorted(map(str, dkeys))})")
+        problem = problems[0]
     if problem is None:
-        # an ephemeral default problem can never be re-identified (its id
-        # dies with this call) — caching the program would only pin memory
         problem = PROBLEMS["quadratic"](
             n_workers=cfgs[0].n_workers, seed=cfgs[0].seed)
-        if problem_key is None:
-            cache = False
     x0 = problem[2]
     seeds = [[c.seed] for c in cfgs] if seeds is None else [list(s) for s in seeds]
     if len(seeds) != len(cfgs) or len({len(s) for s in seeds}) != 1:
@@ -570,17 +630,37 @@ def simulate_training_classbatch(
                          "delay_slots": max(s.delay_slots for s, _ in split)})
     comp = merge_representative([c.compressor for c in cfgs])
 
+    has_data = getattr(problem, "data", None) is not None
+    if problems is not None and not spec.traced_noise:
+        # the compiled grad closure bakes the REPRESENTATIVE problem's noise;
+        # per-cell factory noise would be silently dropped
+        if len({getattr(p, "noise", 0.0) for p in problems}) > 1:
+            raise ValueError("per-cell problems with differing factory noise "
+                             "need grad_noise traced")
+    if has_data:
+        # structural program identity; the arrays arrive traced — add the
+        # baked factory noise only when the cells do not trace their own
+        pkey = (problem.data_key,
+                None if spec.traced_noise else getattr(problem, "noise", 0.0))
+    else:
+        # a legacy tuple bakes its arrays: fall back to pinned identity (an
+        # ephemeral instance can never be re-identified — don't cache)
+        if problem_key is None and problems is None and cache:
+            problem_key = id(problem)
+        pkey = problem_key
+        if pkey is None:
+            cache = False
+
     C, R = len(cfgs), len(seeds[0])
-    cache_key = (spec, structural_envelope(comp),
-                 problem_key if problem_key is not None else id(problem), C, R)
+    cache_key = (spec, structural_envelope(comp), pkey, C, R)
     hit = cache and cache_key in _ENGINE_CACHE
     if hit:
         fn = _ENGINE_CACHE[cache_key][0]
         _ENGINE_STATS.hits += 1
     else:
         replica_fn = _build_cell_replica_fn(spec, comp, problem)
-        fn = jax.jit(jax.vmap(jax.vmap(replica_fn, in_axes=(None, 0)),
-                              in_axes=(0, 0)))
+        fn = jax.jit(jax.vmap(jax.vmap(replica_fn, in_axes=(None, 0, None)),
+                              in_axes=(0, 0, 0)))
         _ENGINE_STATS.compiles += 1
         if cache:
             if len(_ENGINE_CACHE) >= _ENGINE_CACHE_CAP:
@@ -591,7 +671,13 @@ def simulate_training_classbatch(
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ptrees)
     seed_keys = jnp.stack([
         jnp.stack([jax.random.key(sd) for sd in row]) for row in seeds])
-    losses, cons, bits, errs = fn(stacked, seed_keys)
+    if has_data:
+        cell_probs = problems if problems is not None else [problem] * C
+        data = jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[p.data for p in cell_probs])
+    else:
+        data = None
+    losses, cons, bits, errs = fn(stacked, seed_keys, data)
     return [
         [
             {
@@ -614,7 +700,8 @@ def _build_replica_fn(cfg: SimCfg, problem):
     spec, params = split_cfg(cfg, dim=problem[2].size)
     replica_fn = _build_cell_replica_fn(spec, cfg.compressor, problem)
     ptree = params.as_tree()
-    return lambda seed_key: replica_fn(ptree, seed_key)
+    data = getattr(problem, "data", None)
+    return lambda seed_key: replica_fn(ptree, seed_key, data)
 
 
 def simulate_training_batch(

@@ -1,4 +1,25 @@
-"""Communication configuration — one knob per taxonomy dimension (Table I)."""
+"""Communication configuration — one knob per taxonomy dimension (Table I).
+
+:class:`CommConfig` is the user-facing cell description.  For the mesh
+runtime it splits the same way the simulator's ``SimCfg`` split into
+``EngineSpec``/``CellParams`` (PR 3):
+
+* :class:`BundleSpec` — the STATIC half: everything that changes the
+  structure of the compiled step programs (sync scheme, aggregator,
+  collective schedule, EF / momentum-correction / clipping *flags*, the
+  compressor *family* at the runtime layer, bucket-plan inputs, pod-local).
+  Bundles with equal specs (same model/mesh/optimizer/shape) share one set
+  of compiled ``train_step``/``sync_step``/``gossip_step`` programs — the
+  bundle cache in :mod:`repro.train.steps` keys on it.
+* :class:`CommKnobs` — the TRACED half: values that ride into the compiled
+  programs as arguments (compressor knobs via the ``RUNTIME_KNOBS``
+  protocol, EF decay, momentum-correction coefficient, clip thresholds,
+  gossip step size / mixing weight, the stochastic-compression seed).
+  ``lr`` was already a traced step argument; Local-SGD ``H`` and the
+  post-local switch never enter a compiled program at all — the Trainer
+  applies them as Python-level step-count comparisons (repro.core.sync), so
+  they are deliberately absent from both halves.
+"""
 
 from __future__ import annotations
 
@@ -38,7 +59,8 @@ class CommConfig:
     collective: str = "xla"  # xla | ring | rhd (manual ppermute schedules)
     gossip_graph: str = "ring"  # ring | exp (exponential peers)
     gossip_compress: str = "none"  # choco | dcd | none
-    gossip_step_size: float = 0.5  # CHOCO-SGD gamma
+    gossip_step_size: float = 0.5  # CHOCO-SGD gamma (traced knob)
+    gossip_mix_weight: float = 1.0 / 3.0  # ring mixing weight w (traced knob)
 
     # --- scheduling (paper §VII) -------------------------------------------------
     bucket_mb: float = 0.0  # 0 = per-tensor; >0 = MG-WFBP-style fused buckets
@@ -49,3 +71,118 @@ class CommConfig:
 
 
 DENSE = CommConfig()
+
+
+# ---------------------------------------------------------------------------
+# The static / traced split of a CommConfig (runtime shape classes).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BundleSpec:
+    """Static (program-structure) half of a :class:`CommConfig`.
+
+    Two configs with equal specs compile to identical step programs; their
+    value differences travel through :class:`CommKnobs` as traced arguments.
+    Compressor identity is the *runtime* fingerprint: the family plus every
+    kwarg that sizes a payload array or specializes a kernel — value-only
+    knobs (``RUNTIME_KNOBS``, e.g. qsgd levels) are excluded.
+    """
+
+    sync: str
+    pod_local: bool
+    aggregator: str
+    collective: str
+    gossip_graph: str
+    gossip_compress: str
+    error_feedback: bool
+    momentum_correction: bool
+    local_clip: bool
+    warmup_steps: int
+    comp_key: tuple
+    rules_key: tuple
+    bucket_mb: float
+    agg_dtype: str
+
+
+def bundle_spec(comm: CommConfig) -> BundleSpec:
+    """Project a :class:`CommConfig` onto its static half.
+
+    Note what is absent: ``local_steps`` / ``post_local_switch`` (Python-side
+    step-count comparisons in the Trainer, never compiled), ``lr`` (a traced
+    step argument), and every knob listed in :class:`CommKnobs`.
+    """
+    from repro.core.compression.base import get_compressor, runtime_fingerprint
+
+    comp = get_compressor(comm.compressor, **comm.compressor_kwargs)
+    return BundleSpec(
+        sync=comm.sync,
+        pod_local=bool(comm.pod_local),
+        aggregator=comm.aggregator,
+        collective=comm.collective,
+        gossip_graph=comm.gossip_graph,
+        gossip_compress=comm.gossip_compress,
+        error_feedback=bool(comm.error_feedback),
+        momentum_correction=bool(comm.momentum_correction),
+        local_clip=bool(comm.local_clip),
+        warmup_steps=int(comm.warmup_steps),
+        comp_key=runtime_fingerprint(comp),
+        rules_key=tuple(
+            (sub, name, tuple(sorted(dict(kw).items())))
+            for sub, name, kw in comm.per_tensor_rules
+        ),
+        bucket_mb=float(comm.bucket_mb),
+        agg_dtype=comm.agg_dtype,
+    )
+
+
+@dataclass
+class CommKnobs:
+    """Traced (values-only) half of a :class:`CommConfig` + build args.
+
+    ``comp`` holds one dict of runtime-traceable compressor knob values per
+    bucket of the plan (``base.runtime_knob_values``); the rest are scalars.
+    ``as_tree()`` is the pytree the step closures receive as an argument —
+    every leaf rides into the compiled program traced, so cells that differ
+    only here share one compiled bundle.
+    """
+
+    ef_decay: float = 1.0
+    momentum: float = 0.0
+    local_clip: float = 0.0
+    gossip_gamma: float = 0.5
+    gossip_w: float = 1.0 / 3.0
+    clip_norm: float = 0.0
+    seed: int = 0
+    comp: tuple = ()  # per-bucket dict of traced compressor knob values
+
+    @classmethod
+    def from_comm(cls, comm: CommConfig, comp_per_bucket: tuple, *,
+                  seed: int = 0, clip_norm: float = 0.0) -> "CommKnobs":
+        return cls(
+            ef_decay=comm.ef_decay,
+            momentum=comm.momentum_correction,
+            local_clip=comm.local_clip,
+            gossip_gamma=comm.gossip_step_size,
+            gossip_w=comm.gossip_mix_weight,
+            clip_norm=clip_norm,
+            seed=seed,
+            comp=comp_per_bucket,
+        )
+
+    def as_tree(self) -> dict:
+        import jax.numpy as jnp
+
+        f32 = jnp.float32
+        return {
+            "ef_decay": jnp.asarray(self.ef_decay, f32),
+            "momentum": jnp.asarray(self.momentum, f32),
+            "local_clip": jnp.asarray(self.local_clip, f32),
+            "gossip_gamma": jnp.asarray(self.gossip_gamma, f32),
+            "gossip_w": jnp.asarray(self.gossip_w, f32),
+            "clip_norm": jnp.asarray(self.clip_norm, f32),
+            "seed": jnp.asarray(self.seed, jnp.int32),
+            "comp": [
+                {k: jnp.asarray(v, f32) for k, v in d.items()} for d in self.comp
+            ],
+        }

@@ -14,12 +14,15 @@ Table II-style comparison of measured vs cost-model-predicted time/bytes.
 
 ``--substrate training`` batches the sweep by shape class — one compiled
 program per (sync x compressor-family x EF) class, however many cells vary
-the traced values (lr, staleness, H, compressor knobs); ``--emit-json``
-records the compile count next to the cells/sec.  ``--substrate trainer``
-runs the cells on the REAL mesh runtime with automated device-count
-selection (the largest valid data-parallel mesh that fits the available
-devices; cells that cannot run are skipped with the reason on stderr) —
-jax is imported lazily so the lane can force host devices first.
+the traced values (lr, staleness, H, compressor knobs, problem seed);
+``--emit-json`` records the compile count next to the cells/sec.
+``--substrate trainer`` runs the cells on the REAL mesh runtime with
+automated device-count selection (the largest valid data-parallel mesh that
+fits the available devices; cells that cannot run are skipped with the
+reason on stderr) — jax is imported lazily so the lane can force host
+devices first, and the sweep is grouped by trainer shape class so cells
+sharing a static ``BundleSpec`` reuse ONE compiled bundle (``--emit-json``
+gains the ``bundle`` build/hit record).
 
 ``--substrate roofline`` emits the analytic per-cell dry-run prediction
 (compute/memory/collective roofline terms); ``--emit-json PATH`` records
@@ -213,42 +216,60 @@ def _ensure_host_devices(n: int) -> int:
 
 def _trainer_sweep(args, scenarios) -> int:
     """The ``--substrate trainer`` lane: real mesh runtime with automated
-    device-count selection.  Cells whose largest valid mesh cannot fit the
-    available devices are skipped with the reason on stderr."""
+    device-count selection, routed through the shape-class-grouped
+    ``run_trainer_sweep`` — cells whose CommConfig shares a static
+    ``BundleSpec`` reuse ONE compiled bundle (``bundle_cache_stats`` lands
+    in the ``--emit-json`` record).  Cells whose largest valid mesh cannot
+    fit the available devices are skipped with the reason on stderr."""
     want = min(max(s.n_workers for s in scenarios), 8)  # bound host-dev cost
     ndev = _ensure_host_devices(want)
 
     from repro.experiments.tables import format_csv, format_table
     from repro.experiments.trainer_substrate import (
-        run_trainer_scenario,
+        run_trainer_sweep,
         select_trainer_device_count,
+        trainer_shape_key,
     )
+    from repro.train.steps import bundle_cache_stats
 
-    results, skipped = [], 0
+    st0 = dataclasses.replace(bundle_cache_stats())
     t0 = time.perf_counter()
-    for s in scenarios:
-        dp, why = select_trainer_device_count(s, ndev)
-        if dp is None:
-            skipped += 1
-            print(f"# skip {s.tag()}: {why}", file=sys.stderr)
-            continue
-        print(f"# trainer cell {s.tag()}: data_par={dp} (of {ndev} devices)",
-              file=sys.stderr)
-        results.append(run_trainer_scenario(s, data_par=dp))
+    all_results, skip_reasons = run_trainer_sweep(
+        scenarios, n_devices=ndev, verbose=True)
     sweep_s = time.perf_counter() - t0
+    for s, why in skip_reasons:
+        print(f"# skip {s.tag()}: {why}", file=sys.stderr)
+    results = [r for r in all_results if r is not None]
+    skipped = len(skip_reasons)
     if not results:
         print(f"# no trainer cells runnable ({skipped} skipped)", file=sys.stderr)
         return 0
+    st1 = bundle_cache_stats()
+    builds, hits = st1.builds - st0.builds, st1.hits - st0.hits
+    ran = [r.scenario for r in results]
+    n_classes = len({
+        trainer_shape_key(s, data_par=select_trainer_device_count(s, ndev)[0])
+        for s in ran
+    })
+    print(f"# bundle cache: {len(results)} cells, {builds} builds, "
+          f"{hits} hits", file=sys.stderr)
     title = (f"trainer sweep: {len(results)} cells ({skipped} skipped), "
-             f"{ndev} devices, steps={args.steps}")
+             f"{ndev} devices, steps={args.steps}, {builds} bundle builds")
     text = format_table(results, title=title) if args.format == "table" else format_csv(results)
     print(text)
     if args.out:
         with open(args.out, "w") as f:
             f.write(text)
     if args.emit_json:
+        record = emit_json_record(results, sweep_s)
+        record["bundle"] = {
+            "n_shape_classes": n_classes,
+            "builds": builds,
+            "cache_hits": hits,
+            "cells_per_s": len(results) / sweep_s,
+        }
         with open(args.emit_json, "w") as f:
-            json.dump(emit_json_record(results, sweep_s), f, indent=2)
+            json.dump(record, f, indent=2)
         print(f"# wrote {args.emit_json}", file=sys.stderr)
     return 0
 

@@ -392,11 +392,14 @@ def training_shape_key(s: Scenario) -> tuple:
     ``jit(vmap_cells(vmap_seeds(scan)))`` program: the key pins everything
     that changes program *structure* — the engine statics
     (:func:`repro.core.simulate.shape_class_key`: sync scheme, worker count,
-    steps, EF flag, compressor family fingerprint) plus the problem identity
-    (objective + its data seed), whose arrays are baked into the trace.
-    Values like lr / staleness / Local-H / compressor knobs / gradient noise
-    are traced per cell and deliberately absent."""
-    return shape_class_key(to_sim_cfg(s)) + (s.objective, s.seed)
+    steps, EF flag, compressor family fingerprint) plus the objective
+    *family* (its grad/loss code).  The problem's arrays (quadratic ``A``/
+    ``b``, logistic ``X``/``y``, ``x*``) are traced per cell through the
+    :class:`repro.core.simulate.Problem` data protocol, so cells differing
+    only in problem seed share the compile; values like lr / staleness /
+    Local-H / compressor knobs / gradient noise are traced too and equally
+    absent."""
+    return shape_class_key(to_sim_cfg(s)) + (s.objective,)
 
 
 _PROBLEM_CACHE: dict[tuple, Any] = {}
@@ -433,13 +436,11 @@ def _run_training_scenarios(
     results: list[ScenarioResult | None] = [None] * len(scenarios)
     for key, idxs in groups.items():
         cells = [scenarios[i] for i in idxs]
-        problem = _training_problem(cells[0])
         outs = simulate_training_classbatch(
             [to_sim_cfg(s) for s in cells],
-            problem,
+            problems=[_training_problem(s) for s in cells],
             seeds=[[s.seed + r for r in range(replicas)] for s in cells],
             grad_noise=[s.grad_noise for s in cells],
-            problem_key=key,
             cache=cache,
         )
         for i, s, cell in zip(idxs, cells, outs):
@@ -519,9 +520,26 @@ def run_scenarios(
 
     On the ``training`` substrate the list is grouped into shape classes
     (:func:`training_shape_key`) and each class executes as ONE compiled
-    batched program — the sweep compiles once per class, not once per cell."""
+    batched program — the sweep compiles once per class, not once per cell.
+    The ``trainer`` substrate analogously routes through
+    :func:`repro.experiments.trainer_substrate.run_trainer_sweep`, so cells
+    sharing a static ``BundleSpec`` reuse one compiled bundle."""
     if substrate == "training":
         return _run_training_scenarios(list(scenarios), replicas=replicas)
+    if substrate == "trainer":
+        from repro.experiments.trainer_substrate import run_trainer_sweep
+
+        scenarios = list(scenarios)
+        for s in scenarios:
+            bad = s.violations("trainer")
+            if bad:
+                raise ValueError(
+                    f"invalid scenario {s.tag()} on trainer: {'; '.join(bad)}")
+        results, skipped = run_trainer_sweep(scenarios)
+        if skipped:
+            why = "; ".join(f"{s.tag()}: {r}" for s, r in skipped)
+            raise ValueError(f"trainer cells not runnable: {why}")
+        return results  # type: ignore[return-value]
     return [run_scenario(s, substrate, replicas=replicas) for s in scenarios]
 
 
@@ -530,22 +548,26 @@ def run_scenarios(
 # ---------------------------------------------------------------------------
 
 
-def sweep_matrix_45(*, steps: int = 60, n_workers: int = 8, seed: int = 0) -> list[Scenario]:
+def sweep_matrix_45(*, steps: int = 60, n_workers: int = 8, seed: int = 0,
+                    problem_seeds: tuple[int, ...] = (0,)) -> list[Scenario]:
     """The fixed 45-cell perf-tracking sweep: 5 sync/topology schemes x
     3 quantization levels x 3 learning rates (qsgd+EF everywhere).  Exactly
     5 shape classes — within a scheme the cells differ only in traced
     values, so the batched engine compiles 5 programs where the per-cell
-    path compiles 45."""
+    path compiles 45.  ``problem_seeds`` replicates the matrix across
+    problem instances (45 x len cells): because problem data is traced, the
+    class count — and the compile count — stays 5."""
     cells = []
     for sync, arch in (("bsp", "allreduce"), ("local", "allreduce"),
                        ("ssp", "ps"), ("asp", "ps"), ("bsp", "gossip")):
         for levels in (4, 8, 16):
             for lr in (0.02, 0.05, 0.08):
-                cells.append(Scenario(
-                    sync=sync, arch=arch, n_workers=n_workers, steps=steps,
-                    lr=lr, staleness=4, local_steps=8, compressor="qsgd",
-                    compressor_kwargs={"levels": levels}, error_feedback=True,
-                    seed=seed))
+                for ps in problem_seeds:
+                    cells.append(Scenario(
+                        sync=sync, arch=arch, n_workers=n_workers, steps=steps,
+                        lr=lr, staleness=4, local_steps=8, compressor="qsgd",
+                        compressor_kwargs={"levels": levels}, error_feedback=True,
+                        seed=seed + ps))
     return cells
 
 
@@ -563,6 +585,9 @@ def measure_sweep_speedup(
 
     scenarios = sweep_matrix_45() if scenarios is None else list(scenarios)
     classes = {training_shape_key(s) for s in scenarios}
+    # what the class count would be WITHOUT the traced-problem-data protocol:
+    # the pre-data-threading key also pinned the problem instance (seed)
+    classes_per_problem = {training_shape_key(s) + (s.seed,) for s in scenarios}
 
     engine_cache_clear()
     t0 = time.perf_counter()
@@ -574,6 +599,9 @@ def measure_sweep_speedup(
     out: dict[str, Any] = {
         "n_cells": len(scenarios),
         "n_shape_classes": len(classes),
+        "n_problem_instances": len({(s.objective, s.n_workers, s.seed)
+                                    for s in scenarios}),
+        "n_classes_without_shared_problems": len(classes_per_problem),
         "replicas": replicas,
         "steps": scenarios[0].steps,
         "n_workers": scenarios[0].n_workers,

@@ -27,7 +27,11 @@ def to_comm_config(s: Scenario):
         compressor_kwargs=s.kwargs_dict,
         error_feedback=s.error_feedback,
         sync=s.sync,
-        local_steps=s.local_steps if s.sync in ("local", "post_local") else 1,
+        # pod_local keeps H under sync="bsp" too: the pod axis is averaged
+        # every local_steps (the §III-D boundary), not every step
+        local_steps=(s.local_steps
+                     if s.sync in ("local", "post_local") or s.pod_local
+                     else 1),
         post_local_switch=s.post_local_switch,
         pod_local=s.pod_local,
         aggregator="gossip" if s.arch == "gossip" else "allreduce",
@@ -54,12 +58,21 @@ def select_trainer_device_count(
                   f"(have {n_devices} device(s))")
 
 
+def _phase_sync_steps(s: Scenario, steps: int) -> int:
+    """Sync steps the runtime actually fires in [post_local_switch, steps):
+    ``repro.core.sync`` tests the ABSOLUTE step phase ((t+1) % H == 0), so a
+    switch point that is not a multiple of H still syncs on the global
+    grid."""
+    H = s.local_steps
+    return sum(1 for t in range(s.post_local_switch, steps) if (t + 1) % H == 0)
+
+
 def sync_rounds(s: Scenario, steps: int) -> int:
     """Parameter/gradient synchronization rounds a Scenario performs."""
     if s.sync == "local":
         return steps // s.local_steps
     if s.sync == "post_local":
-        return s.post_local_switch + (steps - s.post_local_switch) // s.local_steps
+        return s.post_local_switch + _phase_sync_steps(s, steps)
     return steps
 
 
@@ -83,6 +96,41 @@ def make_tiny_workload(vocab: int = 128, batch: int = 64, seq: int = 16):
     return cfg, shape, Data()
 
 
+def trainer_shape_key(s: Scenario, *, data_par: int | None = None,
+                      model_par: int = 1) -> tuple:
+    """Hashable trainer shape-class identity of a Scenario: the static
+    :func:`repro.core.types.bundle_spec` of its CommConfig plus the mesh
+    extents.  Cells with equal keys share ONE compiled bundle
+    (``train_step``/``sync_step``/``gossip_step``) through the bundle
+    registry in :mod:`repro.train.steps`; everything else — lr, Local-H,
+    post-local switch, compressor value knobs, gossip weights — is either
+    traced or a Python-level trainer decision and deliberately absent."""
+    from repro.core.types import bundle_spec
+
+    return (bundle_spec(to_comm_config(s)), data_par or s.n_workers, model_par)
+
+
+def trainer_wire_per_step(s: Scenario, wire: dict[str, dict[str, float]]) -> float:
+    """Per-step wire bytes of one cell from the bundle's build-time wire
+    artifact.  ``post_local`` blends the two phases: the BSP phase pays the
+    per-step gradient aggregation for ``post_local_switch`` steps, then each
+    H-round pays one aggregation + one parameter average (the old accounting
+    reported only ``local_sgd_sync / H`` and silently dropped the BSP-phase
+    ``grad_agg`` bytes)."""
+    ga = wire.get("train", {}).get("grad_agg", 0.0)
+    ls = wire.get("sync", {}).get("local_sgd_sync", 0.0)
+    if s.arch == "gossip":
+        return wire.get("gossip", {}).get("gossip_mix", 0.0)
+    if s.pod_local:  # in-pod aggregation every step + pod average every H
+        return ga + ls / s.local_steps
+    if s.sync == "local":
+        return ls / s.local_steps
+    if s.sync == "post_local":
+        rounds = _phase_sync_steps(s, s.steps)
+        return (s.post_local_switch * ga + rounds * (ga + ls)) / s.steps
+    return ga
+
+
 def run_trainer_scenario(
     s: Scenario,
     *,
@@ -90,13 +138,15 @@ def run_trainer_scenario(
     model_par: int = 1,
     momentum: float = 0.0,
     log_every: int | None = None,
+    bundle_cache: bool = True,
 ) -> ScenarioResult:
     """Train the tiny workload under the scenario's CommConfig; measures
-    final loss, wire bytes per step (from the comms capture log) and the
-    number of synchronization rounds."""
+    final loss, wire bytes per step (from the bundle's build-time wire
+    artifact, so cache-reused bundles keep exact accounting) and the number
+    of synchronization rounds.  ``bundle_cache=False`` forces a fresh
+    ``build_bundle`` — the per-cell baseline the sweep benchmark times."""
     import numpy as np
 
-    from repro.core import comms
     from repro.launch.mesh import make_test_mesh
     from repro.optim.optimizers import momentum_sgd
     from repro.optim.schedules import constant
@@ -108,24 +158,161 @@ def run_trainer_scenario(
     dp = data_par or s.n_workers
     mesh = make_test_mesh(data=dp, model=model_par)
 
-    with comms.capture() as log:
-        bundle = build_bundle(cfg, mesh, comm, momentum_sgd(momentum), shape)
-        trainer = Trainer(bundle, data, constant(s.lr),
-                          log_every=log_every or max(1, s.steps - 1))
-        trainer.fit(trainer.init(), s.steps)
-
-    by_tag = log.by_tag()
-    wire_per_step = by_tag.get("grad_agg", 0.0)
-    if s.sync in ("local", "post_local"):
-        wire_per_step = by_tag.get("local_sgd_sync", 0.0) / s.local_steps
-    if s.arch == "gossip":
-        wire_per_step = by_tag.get("gossip_mix", wire_per_step) or wire_per_step
+    bundle = build_bundle(cfg, mesh, comm, momentum_sgd(momentum), shape,
+                          seed=s.seed, cache=bundle_cache)
+    trainer = Trainer(bundle, data, constant(s.lr),
+                      log_every=log_every or max(1, s.steps - 1))
+    trainer.fit(trainer.init(), s.steps)
 
     measured: dict[str, Any] = {
         "final_loss": float(trainer.history[-1]["loss"]),
-        "wire_kb_per_step": wire_per_step / 1e3,
+        "wire_kb_per_step": trainer_wire_per_step(s, bundle.wire or {}) / 1e3,
         "sync_rounds": float(sync_rounds(s, s.steps)),
     }
     series = {"loss": np.asarray([h["loss"] for h in trainer.history])}
     return ScenarioResult(s, "trainer", measured, predicted={}, replicas=1,
                           series=series)
+
+
+# ---------------------------------------------------------------------------
+# Shape-class batched sweep over the real mesh runtime.
+# ---------------------------------------------------------------------------
+
+
+def run_trainer_sweep(
+    scenarios: list[Scenario],
+    *,
+    n_devices: int | None = None,
+    data_par: int | None = None,
+    model_par: int = 1,
+    momentum: float = 0.0,
+    log_every: int | None = None,
+    bundle_cache: bool = True,
+    verbose: bool = False,
+) -> tuple[list[ScenarioResult | None], list[tuple[Scenario, str]]]:
+    """Run a Scenario slice on the mesh runtime, grouped by trainer shape
+    class (the trainer-lane counterpart of the simulator's
+    ``simulate_training_classbatch``).  The build sharing itself comes from
+    the bundle registry in :mod:`repro.train.steps` — every cell of a class
+    resolves to the same cache key and reuses the compiled
+    ``train_step``/``sync_step``/``gossip_step`` with its own traced knob
+    values; the grouping here keeps each class's cells contiguous, so a
+    class builds once up front and cannot be evicted mid-class by an
+    interleaved sweep larger than the registry cap.
+
+    Device counts come from ``data_par`` (fixed) or per cell from
+    :func:`select_trainer_device_count` when ``n_devices`` is given.
+    Returns ``(results, skipped)``: results in input order (``None`` for
+    skipped cells), and the skip reasons.
+    """
+    import sys
+
+    if data_par is None and n_devices is None:
+        # bound per-cell mesh selection by the devices that actually exist
+        import jax
+
+        n_devices = len(jax.devices())
+
+    plan: list[tuple[int, Scenario, int]] = []
+    skipped: list[tuple[Scenario, str]] = []
+    for i, s in enumerate(scenarios):
+        if data_par is not None:
+            plan.append((i, s, data_par))
+            continue
+        dp, why = select_trainer_device_count(s, n_devices)
+        if dp is None:
+            skipped.append((s, why))
+        else:
+            plan.append((i, s, dp))
+
+    groups: dict[tuple, list[tuple[int, Scenario, int]]] = {}
+    for item in plan:
+        key = trainer_shape_key(item[1], data_par=item[2], model_par=model_par)
+        groups.setdefault(key, []).append(item)
+
+    results: list[ScenarioResult | None] = [None] * len(scenarios)
+    for key, items in groups.items():
+        for i, s, dp in items:
+            if verbose:
+                print(f"# trainer cell {s.tag()}: data_par={dp}", file=sys.stderr)
+            results[i] = run_trainer_scenario(
+                s, data_par=dp, model_par=model_par, momentum=momentum,
+                log_every=log_every, bundle_cache=bundle_cache)
+    return results, skipped
+
+
+def trainer_matrix_8(*, steps: int = 24, n_workers: int = 4, seed: int = 0) -> list[Scenario]:
+    """The fixed trainer-lane acceptance sweep: 2 sync schemes (bsp, local)
+    x 2 compressor families (qsgd, terngrad) x 2 knob values = 8 cells
+    spanning exactly 4 shape classes — within a class only traced knob
+    values differ, so the sweep builds 4 bundles, not 8."""
+    cells = []
+    for sync in ("bsp", "local"):
+        for comp, kwargs in (("qsgd", ({"levels": 4}, {"levels": 16})),
+                             ("terngrad", ({"clip_sigma": 0.0}, {"clip_sigma": 2.5}))):
+            for kw in kwargs:
+                cells.append(Scenario(
+                    sync=sync, local_steps=4, n_workers=n_workers, steps=steps,
+                    lr=0.1, compressor=comp, compressor_kwargs=kw,
+                    error_feedback=True, seed=seed))
+    return cells
+
+
+def measure_trainer_sweep(
+    scenarios: list[Scenario] | None = None,
+    *,
+    data_par: int | None = None,
+    model_par: int = 1,
+) -> dict[str, Any]:
+    """Wall-clock + bundle-build count of the shape-class-shared trainer
+    sweep vs the per-cell rebuild path (a fresh ``build_bundle`` per cell),
+    plus the max deviation between the two result sets — the acceptance
+    record behind ``BENCH_trainer.json``."""
+    import time
+
+    import numpy as np
+
+    from repro.train.steps import bundle_cache_clear, bundle_cache_stats
+
+    scenarios = trainer_matrix_8() if scenarios is None else list(scenarios)
+    classes = {trainer_shape_key(s, data_par=data_par, model_par=model_par)
+               for s in scenarios if not s.violations("trainer")}
+
+    bundle_cache_clear()
+    t0 = time.perf_counter()
+    shared, skipped = run_trainer_sweep(scenarios, data_par=data_par,
+                                        model_par=model_par)
+    shared_s = time.perf_counter() - t0
+    st = bundle_cache_stats()
+    builds_shared, hits_shared = st.builds, st.hits
+
+    bundle_cache_clear()
+    t0 = time.perf_counter()
+    percell, _ = run_trainer_sweep(scenarios, data_par=data_par,
+                                   model_par=model_par, bundle_cache=False)
+    percell_s = time.perf_counter() - t0
+    builds_percell = bundle_cache_stats().builds
+
+    ran = [(a, b) for a, b in zip(shared, percell) if a is not None and b is not None]
+    dev_loss = max(
+        (float(np.max(np.abs(a.series["loss"] - b.series["loss"])
+                      / np.maximum(np.abs(b.series["loss"]), 1e-6)))
+         for a, b in ran),
+        default=float("nan"),
+    )
+    return {
+        "n_cells": len(scenarios),
+        "n_skipped": len(skipped),
+        "n_shape_classes": len(classes),
+        "steps": scenarios[0].steps,
+        "builds_shared": builds_shared,
+        "cache_hits": hits_shared,
+        "builds_percell": builds_percell,
+        "shared_s": shared_s,
+        "percell_s": percell_s,
+        "speedup": percell_s / shared_s,
+        "max_rel_dev_loss": dev_loss,
+        "wire_kb_per_step": {
+            r.tag: r.measured["wire_kb_per_step"] for r in shared if r is not None
+        },
+    }

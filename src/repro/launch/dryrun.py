@@ -51,7 +51,10 @@ COMM_PRESETS = {
 def _lower_step(cfg, mesh, shape, comm_name: str):
     if shape.kind == "train":
         comm = COMM_PRESETS[comm_name]
-        bundle = build_bundle(cfg, mesh, comm, adamw(), shape)
+        # cache=False: the dry-run derives its collective accounting from
+        # tracing under the enclosing comms.capture(); a registry-served
+        # bundle would reuse jax's trace cache and leave the log empty
+        bundle = build_bundle(cfg, mesh, comm, adamw(), shape, cache=False)
         return bundle.train_step.lower(
             bundle.state_abstract, bundle.batch_specs, jax.ShapeDtypeStruct((), jnp.float32)
         ), 2.0  # AD twin collectives for TP (DESIGN/comms docs)

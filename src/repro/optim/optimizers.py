@@ -23,6 +23,9 @@ class Optimizer:
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
     name: str = "opt"
+    #: hashable identity of coefficients NOT already encoded in ``name``
+    #: (adamw betas, nesterov flag) — part of the step-bundle cache key
+    fingerprint: tuple = ()
 
 
 def sgd() -> Optimizer:
@@ -51,7 +54,7 @@ def momentum_sgd(m: float = 0.9, nesterov: bool = False) -> Optimizer:
         new = jax.tree.map(lambda p, s: (p.astype(f32) - lr * s).astype(p.dtype), params, step)
         return new, {"v": v}
 
-    return Optimizer(init, update, f"momentum{m}")
+    return Optimizer(init, update, f"momentum{m}", (nesterov,))
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, wd: float = 0.0) -> Optimizer:
@@ -78,7 +81,7 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, wd: float = 0.0)
         new = jax.tree.map(upd, params, m, v)
         return new, {"m": m, "v": v, "t": t}
 
-    return Optimizer(init, update, "adamw")
+    return Optimizer(init, update, "adamw", (b1, b2, eps, wd))
 
 
 def zero1(opt: Optimizer, data_axes: tuple[str, ...]) -> Optimizer:
@@ -134,13 +137,15 @@ def zero1(opt: Optimizer, data_axes: tuple[str, ...]) -> Optimizer:
         new_params = jax.tree.map(regather, params, new_sl)
         return new_params, {"inner": inner}
 
-    return Optimizer(init, update, f"zero1_{opt.name}")
+    return Optimizer(init, update, f"zero1_{opt.name}", opt.fingerprint)
 
 
-def global_clip(grads: Any, max_norm: float) -> Any:
+def global_clip(grads: Any, max_norm) -> Any:
     """Global-norm gradient clipping (vanilla [223]; the *local* variant
-    lives in repro.core.feedback.local_clip)."""
-    if not max_norm:
+    lives in repro.core.feedback.local_clip).  ``max_norm`` may be a traced
+    scalar (the bundle-cache path passes the threshold as a CommKnobs
+    value); only a *static* zero short-circuits."""
+    if isinstance(max_norm, (int, float)) and not max_norm:
         return grads
     g2 = sum(jnp.sum(jnp.square(g.astype(f32))) for g in jax.tree.leaves(grads))
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(jnp.sqrt(g2), 1e-30))

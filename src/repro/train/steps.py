@@ -34,7 +34,7 @@ from repro.compat import shard_map, axis_size as compat_axis_size
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import aggregate, comms, gossip, sync
 from repro.core.compression.base import get_compressor
-from repro.core.types import CommConfig
+from repro.core.types import BundleSpec, CommConfig, CommKnobs, bundle_spec
 from repro.launch import specs as SP
 from repro.models import transformer as T
 from repro.models.sharding import AxisCtx, make_plan, tree_specs
@@ -127,10 +127,114 @@ class StepBundle:
     eval_step: Callable  # (state, batch) -> loss
     batch_specs: Any = None
     batch_pspecs: Any = None
+    #: static half of the cell's CommConfig (the bundle-cache identity)
+    spec: BundleSpec | None = None
+    #: per-call wire bytes by tag, captured once at build time by tracing
+    #: each step program abstractly: {"train"|"inner"|"sync"|"gossip":
+    #: {tag: bytes}}.  Cache-reused bundles carry the same artifact, so wire
+    #: accounting no longer depends on being the first trace of the program.
+    wire: dict[str, dict[str, float]] | None = None
 
     def shardings(self, tree_pspecs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), tree_pspecs,
                             is_leaf=lambda l: isinstance(l, P))
+
+
+class BoundStep:
+    """A compiled knob-threaded step, bound to one cell's traced knob values.
+
+    ``fn(state, batch, lr, knobs)`` becomes the familiar
+    ``step(state, batch, lr)``; ``lower(...)`` forwards to the underlying
+    jitted function (the dry-run path) with the knobs appended."""
+
+    def __init__(self, fn: Callable, knobs: Any, n_args: int):
+        self._fn = fn
+        self._knobs = knobs
+        self._n_args = n_args
+
+    def __call__(self, *args):
+        assert len(args) == self._n_args, (len(args), self._n_args)
+        return self._fn(*args, self._knobs)
+
+    def lower(self, *args):
+        return self._fn.lower(*args, self._knobs)
+
+
+@dataclass
+class _CompiledBundle:
+    """The shape-class-shared half of a bundle: everything whose identity is
+    (model, mesh, BundleSpec, plan signature, optimizer, shape) — compiled
+    step programs take the cell's :class:`CommKnobs` tree as a traced
+    trailing argument, so every cell of the class reuses them."""
+
+    ax: AxisCtx
+    param_abstract: Any
+    param_specs: Any
+    state_specs: Any
+    state_abstract: Any
+    batch_specs: Any
+    batch_pspecs: Any
+    init_state: Callable
+    train_step_k: Callable  # (state, batch, lr, knobs)
+    inner_step_k: Callable | None
+    sync_step: Callable | None  # knob-free (the collective impl is static)
+    gossip_step_k: Callable | None
+    eval_step: Callable
+    wire: dict[str, dict[str, float]]
+
+
+@dataclass
+class BundleCacheStats:
+    """Build/hit counters for the bundle registry — the trainer-lane sweeps
+    assert ``builds <= #shape-classes`` (mirrors ``engine_cache_stats``)."""
+
+    builds: int = 0
+    hits: int = 0
+
+
+_BUNDLE_STATS = BundleCacheStats()
+_BUNDLE_CACHE: dict[tuple, _CompiledBundle] = {}
+_BUNDLE_CACHE_CAP = 32
+
+
+def bundle_cache_stats() -> BundleCacheStats:
+    return _BUNDLE_STATS
+
+
+def bundle_cache_clear() -> None:
+    """Drop every cached compiled bundle and zero the counters."""
+    _BUNDLE_CACHE.clear()
+    _BUNDLE_STATS.builds = 0
+    _BUNDLE_STATS.hits = 0
+
+
+def _mesh_key(mesh) -> tuple:
+    return (
+        tuple(mesh.axis_names),
+        tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+        tuple(d.id for d in mesh.devices.flat),
+    )
+
+
+def bundle_cache_key(
+    cfg: ModelConfig, mesh, spec: BundleSpec, plan: aggregate.BucketPlan,
+    opt: Optimizer, shape: InputShape, *, clip_norm: float = 0.0,
+    microbatch: int = 1,
+) -> tuple:
+    """The registry key: model-config fingerprint, mesh shape, static comm
+    spec, bucket-plan signature, optimizer identity, input shape, and the
+    structural build flags.  ``seed``, ``lr``, ``clip_norm``'s *value* and
+    every CommKnobs value are deliberately absent — they are traced."""
+    return (
+        repr(cfg),  # dataclass repr = full field fingerprint
+        _mesh_key(mesh),
+        spec,
+        aggregate.plan_signature(plan),
+        (opt.name, opt.fingerprint),
+        shape,
+        bool(clip_norm),
+        int(microbatch),
+    )
 
 
 def build_bundle(
@@ -143,10 +247,74 @@ def build_bundle(
     clip_norm: float = 0.0,
     seed: int = 0,
     microbatch: int = 1,
+    cache: bool = True,
 ) -> StepBundle:
-    ax = SP.make_axis_ctx(mesh)
+    """Build (or fetch from the bundle registry) the step programs for one
+    taxonomy cell.  Cells whose :func:`repro.core.types.bundle_spec` —
+    plus model / mesh / plan signature / optimizer / shape — coincide share
+    ONE set of compiled ``train_step``/``sync_step``/``gossip_step``
+    programs; their value knobs (compressor levels/clip, EF decay, momentum
+    coefficient, gossip weights, seed, clip threshold) ride along as a
+    traced :class:`repro.core.types.CommKnobs` tree.  ``cache=False``
+    forces a fresh build (the per-cell baseline the trainer sweep
+    benchmark measures against)."""
+    spec = bundle_spec(comm)
     msize = mesh.shape["model"]
-    param_abs, param_specs, plan = T.abstract_params(cfg, msize)
+    param_abs, param_specs, _ = T.abstract_params(cfg, msize)
+    grads_local_abs = local_abstract(param_abs, param_specs, mesh)
+    bplan = aggregate.make_bucket_plan(comm, grads_local_abs)
+
+    key = bundle_cache_key(cfg, mesh, spec, bplan, opt, shape,
+                           clip_norm=clip_norm, microbatch=microbatch)
+    cb = _BUNDLE_CACHE.get(key) if cache else None
+    if cb is None:
+        cb = _compile_bundle(cfg, mesh, comm, opt, shape, spec, bplan,
+                             param_abs, param_specs,
+                             clip_norm=clip_norm, microbatch=microbatch)
+        _BUNDLE_STATS.builds += 1
+        if cache:
+            if len(_BUNDLE_CACHE) >= _BUNDLE_CACHE_CAP:
+                _BUNDLE_CACHE.pop(next(iter(_BUNDLE_CACHE)))
+            _BUNDLE_CACHE[key] = cb
+    else:
+        _BUNDLE_STATS.hits += 1
+
+    knobs = CommKnobs.from_comm(
+        comm, bplan.knob_values(), seed=seed, clip_norm=clip_norm
+    ).as_tree()
+    return StepBundle(
+        cfg=cfg, comm=comm, mesh=mesh, ax=cb.ax,
+        param_abstract=cb.param_abstract, param_specs=cb.param_specs,
+        state_specs=cb.state_specs, state_abstract=cb.state_abstract,
+        bucket_plan=bplan, opt=opt,
+        init_state=cb.init_state,
+        train_step=BoundStep(cb.train_step_k, knobs, 3),
+        inner_step=(BoundStep(cb.inner_step_k, knobs, 3)
+                    if cb.inner_step_k is not None else None),
+        sync_step=cb.sync_step,
+        gossip_step=(BoundStep(cb.gossip_step_k, knobs, 3)
+                     if cb.gossip_step_k is not None else None),
+        eval_step=cb.eval_step,
+        batch_specs=cb.batch_specs, batch_pspecs=cb.batch_pspecs,
+        spec=spec, wire=cb.wire,
+    )
+
+
+def _compile_bundle(
+    cfg: ModelConfig,
+    mesh,
+    comm: CommConfig,
+    opt: Optimizer,
+    shape: InputShape,
+    spec: BundleSpec,
+    bplan: aggregate.BucketPlan,
+    param_abs: Any,
+    param_specs: Any,
+    *,
+    clip_norm: float = 0.0,
+    microbatch: int = 1,
+) -> _CompiledBundle:
+    ax = SP.make_axis_ctx(mesh)
     batch_abs, batch_pspecs = SP.train_inputs(cfg, shape, mesh)
 
     # pod-local mode: per-step gradient aggregation stays inside the pod
@@ -156,10 +324,6 @@ def build_bundle(
     if comm.pod_local and "pod" in mesh.axis_names:
         agg_axes = tuple(a for a in ax.data if a != "pod")
         sync_axes = ("pod",)
-
-    # bucket plan from *local* grad shapes
-    grads_local_abs = local_abstract(param_abs, param_specs, mesh)
-    bplan = aggregate.make_bucket_plan(comm, grads_local_abs)
 
     # ---- state specs ---------------------------------------------------------
     all_axes = ax.data + (ax.model,)
@@ -225,6 +389,15 @@ def build_bundle(
                       check_vma=False)
     )
 
+    # ---- traced knob tree -----------------------------------------------------
+    # every step program takes the cell's CommKnobs tree as a trailing traced
+    # argument; this representative (the compile cell's values) only fixes
+    # the tree STRUCTURE — values are rebound per cell by build_bundle.
+    knobs0 = CommKnobs.from_comm(
+        comm, bplan.knob_values(), clip_norm=clip_norm
+    ).as_tree()
+    knob_pspecs = jax.tree.map(lambda _: P(), knobs0)
+
     # ---- train steps -----------------------------------------------------------
     def make_step(do_aggregate: bool):
         def _grads(params, batch):
@@ -234,7 +407,7 @@ def build_bundle(
 
             return jax.value_and_grad(loss_fn, has_aux=True)(params)
 
-        def _step(state, batch, lr):
+        def _step(state, batch, lr, knobs):
             params = state["params"]
             if microbatch > 1:
                 # gradient accumulation: fwd+bwd one microbatch at a time —
@@ -260,12 +433,12 @@ def build_bundle(
             grads = _fix_model_grads(grads, param_specs, ax.model)
             cstate = state["comm"]
             if do_aggregate:
-                key = jax.random.fold_in(jax.random.key(seed), state["step"])
+                key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
                 grads, cstate = aggregate.aggregate_gradients(
-                    comm, bplan, grads, cstate, key, agg_axes
+                    comm, bplan, grads, cstate, key, agg_axes, knobs=knobs
                 )
             if clip_norm:
-                grads = global_clip(grads, clip_norm)
+                grads = global_clip(grads, knobs["clip_norm"])
             new_params, opt_state = opt.update(grads, state["opt"], params, lr)
             loss = comms.pmean(loss, ax.data)
             out = {
@@ -279,38 +452,37 @@ def build_bundle(
                 out,
             )
 
-        return jax.jit(
-            shard_map(
-                _step, mesh=mesh,
-                in_specs=(state_specs, batch_pspecs, P()),
-                out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
-                check_vma=False,
-            ),
-            donate_argnums=(0,),
+        raw = shard_map(
+            _step, mesh=mesh,
+            in_specs=(state_specs, batch_pspecs, P(), knob_pspecs),
+            out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
+            check_vma=False,
         )
+        return raw, jax.jit(raw, donate_argnums=(0,))
 
-    train_step = make_step(do_aggregate=True)
-    inner_step = make_step(do_aggregate=False) if comm.sync in ("local", "post_local") else None
+    raw_train, train_step = make_step(do_aggregate=True)
+    raw_inner, inner_step = (
+        make_step(do_aggregate=False)
+        if comm.sync in ("local", "post_local") else (None, None)
+    )
 
     # ---- local SGD sync ----------------------------------------------------------
     def _sync(state):
         params = sync.average_params(state["params"], sync_axes, impl=comm.collective)
         return {**state, "params": params}
 
-    sync_step = (
-        jax.jit(shard_map(_sync, mesh=mesh, in_specs=(state_specs,),
-                              out_specs=state_specs, check_vma=False),
-                donate_argnums=(0,))
-        if comm.sync in ("local", "post_local") or comm.pod_local
-        else None
-    )
+    raw_sync = sync_step = None
+    if comm.sync in ("local", "post_local") or comm.pod_local:
+        raw_sync = shard_map(_sync, mesh=mesh, in_specs=(state_specs,),
+                             out_specs=state_specs, check_vma=False)
+        sync_step = jax.jit(raw_sync, donate_argnums=(0,))
 
     # ---- gossip step ----------------------------------------------------------
-    gossip_step = None
+    raw_gossip = gossip_step = None
     if comm.aggregator == "gossip":
         compressor = get_compressor(comm.compressor, **comm.compressor_kwargs)
 
-        def _gstep(state, batch, lr):
+        def _gstep(state, batch, lr, knobs):
             params = state["params"]
 
             def loss_fn(p):
@@ -328,11 +500,15 @@ def build_bundle(
             with comms.tag("gossip_mix"):
                 if comm.gossip_compress == "choco" and compressor is not None:
                     st = gossip.ChocoState(list(cstate["choco_xhat"]), list(cstate["choco_nbr"]))
-                    key = jax.random.fold_in(jax.random.key(seed), state["step"])
-                    bufs, st = gossip.choco_mix(comm, compressor, key, bufs, st, ax.data)
+                    key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
+                    bufs, st = gossip.choco_mix(
+                        comm, compressor, key, bufs, st, ax.data,
+                        w=knobs["gossip_w"], gamma=knobs["gossip_gamma"],
+                        comp_knobs=knobs["comp"],
+                    )
                     cstate["choco_xhat"], cstate["choco_nbr"] = st.x_hat, st.x_hat_nbr
                 else:
-                    bufs = gossip.dpsgd_mix(bufs, ax.data)
+                    bufs = gossip.dpsgd_mix(bufs, ax.data, w=knobs["gossip_w"])
             new_leaves = aggregate._scatter_buckets(bplan, bufs, leaves)
             new_params = jax.tree.unflatten(treedef, new_leaves)
             cstate["step"] = cstate["step"] + 1
@@ -342,13 +518,13 @@ def build_bundle(
             return ({"params": new_params, "opt": opt_state, "comm": cstate,
                      "step": state["step"] + 1}, out)
 
-        gossip_step = jax.jit(
-            shard_map(_gstep, mesh=mesh,
-                          in_specs=(state_specs, batch_pspecs, P()),
-                          out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
-                          check_vma=False),
-            donate_argnums=(0,),
+        raw_gossip = shard_map(
+            _gstep, mesh=mesh,
+            in_specs=(state_specs, batch_pspecs, P(), knob_pspecs),
+            out_specs=(state_specs, {"loss": P(), "ce": P(), "aux": P()}),
+            check_vma=False,
         )
+        gossip_step = jax.jit(raw_gossip, donate_argnums=(0,))
 
     # ---- eval -----------------------------------------------------------------
     def _eval(state, batch):
@@ -362,14 +538,39 @@ def build_bundle(
 
     state_abstract = jax.eval_shape(init_state, param_abs)
 
-    return StepBundle(
-        cfg=cfg, comm=comm, mesh=mesh, ax=ax,
-        param_abstract=param_abs, param_specs=param_specs,
+    # ---- build-time wire accounting -------------------------------------------
+    # Trace each (un-jitted) step program once, abstractly, under a private
+    # capture: the per-call bytes-by-tag become a bundle artifact, so cached
+    # reuse keeps exact accounting without re-tracing.  Wire bytes are
+    # payload-shape quantities — identical for every cell of the class.
+    lr_abs = jax.ShapeDtypeStruct((), f32)
+    wire: dict[str, dict[str, float]] = {}
+
+    def _trace_wire(name, fn, *args):
+        if fn is None:
+            return
+        with comms.capture() as wlog:
+            # trace through a FRESH wrapper object: eval_shape on `fn`
+            # itself would seed jax's shared trace cache for it, and the
+            # jitted step's first real call would then skip tracing —
+            # silencing any capture() an outer caller (dry-run, tests)
+            # holds open around that call
+            jax.eval_shape(lambda *a: fn(*a), *args)
+        wire[name] = wlog.by_tag()
+
+    _trace_wire("train", raw_train, state_abstract, batch_abs, lr_abs, knobs0)
+    _trace_wire("inner", raw_inner, state_abstract, batch_abs, lr_abs, knobs0)
+    _trace_wire("sync", raw_sync, state_abstract)
+    _trace_wire("gossip", raw_gossip, state_abstract, batch_abs, lr_abs, knobs0)
+
+    return _CompiledBundle(
+        ax=ax, param_abstract=param_abs, param_specs=param_specs,
         state_specs=state_specs, state_abstract=state_abstract,
-        bucket_plan=bplan, opt=opt,
-        init_state=init_state, train_step=train_step, inner_step=inner_step,
-        sync_step=sync_step, gossip_step=gossip_step, eval_step=eval_step,
         batch_specs=batch_abs, batch_pspecs=batch_pspecs,
+        init_state=init_state,
+        train_step_k=train_step, inner_step_k=inner_step,
+        sync_step=sync_step, gossip_step_k=gossip_step,
+        eval_step=eval_step, wire=wire,
     )
 
 

@@ -1,0 +1,215 @@
+"""Bundle registry for the mesh runtime: the static/traced CommConfig split
+(BundleSpec vs CommKnobs), build-counter assertions (N cells of one shape
+class -> 1 build), loss-equivalence of cache-reused vs freshly built step
+programs on bsp/local/gossip cells, runtime-knob tracing, the build-time
+wire artifact, and the post_local wire-accounting fix."""
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import make_bucket_plan, plan_signature
+from repro.core.compression.base import (
+    get_compressor,
+    runtime_fingerprint,
+    runtime_knob_values,
+)
+from repro.core.types import CommConfig, CommKnobs, bundle_spec
+from repro.experiments import Scenario
+from repro.experiments.trainer_substrate import (
+    run_trainer_scenario,
+    run_trainer_sweep,
+    trainer_matrix_8,
+    trainer_shape_key,
+    trainer_wire_per_step,
+)
+from repro.train.steps import bundle_cache_clear, bundle_cache_stats
+
+
+# ---------------------------------------------------------------------------
+# The static / traced split.
+# ---------------------------------------------------------------------------
+
+
+def test_bundle_spec_ignores_traced_values():
+    base = CommConfig(compressor="qsgd", compressor_kwargs={"levels": 16},
+                      error_feedback=True)
+    same = [
+        base.with_updates(compressor_kwargs={"levels": 4}),
+        base.with_updates(local_steps=16),            # Python-level H
+        base.with_updates(post_local_switch=40),      # Python-level switch
+        base.with_updates(ef_decay=0.9),
+        base.with_updates(gossip_step_size=0.7),
+        base.with_updates(gossip_mix_weight=0.25),
+    ]
+    assert {bundle_spec(c) for c in same} == {bundle_spec(base)}
+    # structure changers split the class
+    assert bundle_spec(base.with_updates(sync="local")) != bundle_spec(base)
+    assert bundle_spec(base.with_updates(error_feedback=False)) != bundle_spec(base)
+    assert bundle_spec(base.with_updates(compressor="terngrad",
+                                         compressor_kwargs={})) != bundle_spec(base)
+    assert bundle_spec(base.with_updates(momentum_correction=0.9)) != bundle_spec(base)
+    assert bundle_spec(base.with_updates(bucket_mb=4.0)) != bundle_spec(base)
+    assert bundle_spec(base.with_updates(aggregator="gossip")) != bundle_spec(base)
+
+
+def test_runtime_knobs_stricter_than_batch_knobs():
+    """Payload-shaping knobs (top-k's k) are traced in the SIMULATOR but
+    structural at the runtime layer (the wire payload is (values, indices)
+    of size k); quantizer levels are traced at both layers."""
+    assert runtime_fingerprint(get_compressor("qsgd", levels=4)) == \
+        runtime_fingerprint(get_compressor("qsgd", levels=16))
+    assert runtime_fingerprint(get_compressor("terngrad", clip_sigma=0.0)) == \
+        runtime_fingerprint(get_compressor("terngrad", clip_sigma=2.5))
+    assert runtime_fingerprint(get_compressor("topk", ratio=0.01)) != \
+        runtime_fingerprint(get_compressor("topk", ratio=0.1))
+    assert runtime_knob_values(get_compressor("qsgd", levels=8)) == {"levels": 8.0}
+    assert runtime_knob_values(None) == {}
+    with pytest.raises(ValueError, match="int8"):
+        runtime_knob_values(get_compressor("qsgd", levels=200))
+
+
+def test_plan_signature_excludes_runtime_knobs():
+    import jax
+
+    grads = {"a": jax.ShapeDtypeStruct((64,), np.float32),
+             "b": jax.ShapeDtypeStruct((8, 8), np.float32)}
+    p4 = make_bucket_plan(CommConfig(compressor="qsgd",
+                                     compressor_kwargs={"levels": 4}), grads)
+    p16 = make_bucket_plan(CommConfig(compressor="qsgd",
+                                      compressor_kwargs={"levels": 16}), grads)
+    assert plan_signature(p4) == plan_signature(p16)
+    assert p4.knob_values() == ({"levels": 4.0}, {"levels": 4.0})
+    ptop = make_bucket_plan(CommConfig(compressor="topk",
+                                       compressor_kwargs={"ratio": 0.1}), grads)
+    assert plan_signature(ptop) != plan_signature(p4)
+
+
+def test_comm_knobs_tree_structure():
+    comm = CommConfig(compressor="qsgd", compressor_kwargs={"levels": 8},
+                      ef_decay=0.9, gossip_step_size=0.6)
+    tree = CommKnobs.from_comm(comm, ({"levels": 8.0},), seed=3,
+                               clip_norm=1.0).as_tree()
+    assert float(tree["ef_decay"]) == pytest.approx(0.9)
+    assert float(tree["gossip_gamma"]) == pytest.approx(0.6)
+    assert int(tree["seed"]) == 3
+    assert float(tree["clip_norm"]) == pytest.approx(1.0)
+    assert [sorted(d) for d in tree["comp"]] == [["levels"]]
+
+
+def test_trainer_shape_key_groups_like_the_bundle_cache():
+    matrix = trainer_matrix_8()
+    assert len(matrix) == 8
+    assert len({trainer_shape_key(s, data_par=2) for s in matrix}) == 4
+    # >= 2 sync schemes and >= 2 compressor families in the acceptance sweep
+    assert len({s.sync for s in matrix}) >= 2
+    assert len({s.compressor for s in matrix}) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Build counting + loss equivalence on the real runtime (1-device mesh).
+# ---------------------------------------------------------------------------
+
+
+def _cells():
+    base = dict(n_workers=2, steps=4, lr=0.1)
+    return [
+        # 3 qsgd cells in ONE shape class (levels + lr traced)
+        Scenario(compressor="qsgd", compressor_kwargs={"levels": 4}, **base),
+        Scenario(compressor="qsgd", compressor_kwargs={"levels": 16}, **base),
+        Scenario(compressor="qsgd", compressor_kwargs={"levels": 16},
+                 n_workers=2, steps=4, lr=0.05),
+        # local SGD: H is Python-level — H=2 and H=4 share a class
+        Scenario(sync="local", local_steps=2, **base),
+        Scenario(sync="local", local_steps=4, **base),
+        # gossip: mixing weight traced
+        Scenario(arch="gossip", **base),
+    ]
+
+
+def test_one_build_per_shape_class_and_cached_losses_match_fresh():
+    cells = _cells()
+    keys = {trainer_shape_key(s, data_par=1) for s in cells}
+    assert len(keys) == 3  # qsgd-bsp, dense-local, dense-gossip
+
+    bundle_cache_clear()
+    shared, skipped = run_trainer_sweep(cells, data_par=1)
+    assert not skipped
+    st = bundle_cache_stats()
+    assert st.builds == 3, (st, keys)
+    assert st.hits == 3
+
+    # per-cell fresh builds reproduce the cache-reused losses exactly
+    bundle_cache_clear()
+    for s, r in zip(cells, shared):
+        fresh = run_trainer_scenario(s, data_par=1, bundle_cache=False)
+        np.testing.assert_allclose(r.series["loss"], fresh.series["loss"],
+                                   rtol=1e-6, atol=1e-7, err_msg=s.tag())
+    assert bundle_cache_stats().builds == len(cells)
+    # traced qsgd levels actually bite: 4 vs 16 levels diverge
+    assert abs(shared[0].measured["final_loss"]
+               - shared[1].measured["final_loss"]) > 1e-6
+    # traced lr bites within the class
+    assert abs(shared[1].measured["final_loss"]
+               - shared[2].measured["final_loss"]) > 1e-6
+
+
+def test_wire_artifact_present_on_cached_bundles():
+    """The build-time wire artifact survives cache reuse (the old capture-
+    at-first-trace accounting would have come back empty)."""
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim.optimizers import momentum_sgd
+    from repro.train.steps import build_bundle
+
+    cfg = get_config("qwen3-0.6b").reduced().with_updates(
+        vocab=64, n_layers=1, d_ff=64, d_model=64, head_dim=16, n_heads=4,
+        n_kv_heads=2)
+    shape = InputShape("t", 8, 4, "train")
+    mesh = make_test_mesh(1, 1)
+    comm = CommConfig(sync="local", local_steps=4)
+    bundle_cache_clear()
+    b1 = build_bundle(cfg, mesh, comm, momentum_sgd(0.0), shape)
+    b2 = build_bundle(cfg, mesh, comm.with_updates(local_steps=8),
+                      momentum_sgd(0.0), shape)
+    st = bundle_cache_stats()
+    assert (st.builds, st.hits) == (1, 1)
+    assert set(b1.wire) == {"train", "inner", "sync"}
+    assert b2.wire == b1.wire  # same artifact object for the class
+    assert "grad_agg" in b1.wire["train"]
+    assert "grad_agg" not in b1.wire["inner"]  # inner step never aggregates
+    assert "local_sgd_sync" in b1.wire["sync"]
+
+
+# ---------------------------------------------------------------------------
+# post_local wire accounting (the blended per-step figure).
+# ---------------------------------------------------------------------------
+
+
+def test_post_local_wire_blends_both_phases():
+    wire = {"train": {"grad_agg": 100.0}, "sync": {"local_sgd_sync": 60.0}}
+    s = Scenario(sync="post_local", local_steps=4, post_local_switch=8,
+                 n_workers=4, steps=16)
+    # 8 BSP steps x 100 + 2 H-rounds x (100 + 60), over 16 steps
+    expect = (8 * 100.0 + 2 * 160.0) / 16
+    assert trainer_wire_per_step(s, wire) == pytest.approx(expect)
+    # the old accounting (sync bytes / H only) is strictly smaller
+    assert expect > 60.0 / 4
+    # a switch point off the H grid: sync fires on the ABSOLUTE phase
+    # ((t+1) % H == 0, repro.core.sync), so switch=6 H=4 steps=16 still
+    # syncs at t = 7, 11, 15 — 3 rounds, not (16-6)//4 = 2
+    s_off = s.replace(post_local_switch=6)
+    assert trainer_wire_per_step(s_off, wire) == pytest.approx(
+        (6 * 100.0 + 3 * 160.0) / 16)
+    # pure local: sync bytes amortized over H
+    s_local = Scenario(sync="local", local_steps=4, n_workers=4, steps=16)
+    assert trainer_wire_per_step(s_local, wire) == pytest.approx(15.0)
+    # pod-local keeps the per-step in-pod aggregation under BOTH allowed
+    # sync schemes (grads_need_aggregation is True every step)
+    for sync in ("bsp", "local"):
+        s_pod = Scenario(sync=sync, pod_local=True, local_steps=4,
+                         n_workers=4, steps=16)
+        assert trainer_wire_per_step(s_pod, wire) == pytest.approx(115.0)
+    # bsp: per-step aggregation only
+    s_bsp = Scenario(sync="bsp", n_workers=4, steps=16)
+    assert trainer_wire_per_step(s_bsp, wire) == pytest.approx(100.0)

@@ -51,7 +51,10 @@ def test_value_knobs_stay_out_of_the_shape_key():
     same = [base.replace(lr=0.1),
             base.replace(staleness=2),
             base.replace(compressor_kwargs={"levels": 4}),
-            base.replace(grad_noise=0.3)]
+            base.replace(grad_noise=0.3),
+            # problem data (A/b, x*) is traced through the Problem protocol,
+            # so cells differing only in problem seed share the compile
+            base.replace(seed=1)]
     assert {training_shape_key(s) for s in same} == {training_shape_key(base)}
     # structure changers split the class
     assert training_shape_key(base.replace(sync="bsp")) != training_shape_key(base)
@@ -59,7 +62,7 @@ def test_value_knobs_stay_out_of_the_shape_key():
         base.replace(compressor="terngrad", compressor_kwargs=())
     ) != training_shape_key(base)
     assert training_shape_key(base.replace(error_feedback=False)) != training_shape_key(base)
-    assert training_shape_key(base.replace(seed=1)) != training_shape_key(base)
+    assert training_shape_key(base.replace(objective="logistic")) != training_shape_key(base)
 
 
 def test_kernel_compressor_knobs_are_structural():
@@ -87,6 +90,29 @@ def test_sweep_compiles_once_per_shape_class():
     run_scenarios(matrix, "training")
     st = engine_cache_stats()
     assert st.compiles == 5 and st.hits == 5
+
+
+def test_problem_seeds_share_one_compile():
+    """Problem data (quadratic A/b, x*) is traced through the Problem
+    protocol: cells differing ONLY in problem seed run in one compiled
+    program, and their results still match per-cell runs."""
+    matrix = sweep_matrix_45(steps=4, n_workers=4, problem_seeds=(0, 1, 2))
+    assert len(matrix) == 135
+    assert len({training_shape_key(s) for s in matrix}) == 5
+    engine_cache_clear()
+    batched = run_scenarios(matrix, "training")
+    assert engine_cache_stats().compiles == 5  # not 15
+    # a seed-1 cell pulled out of the batch equals its solo run
+    idx = next(i for i, s in enumerate(matrix) if s.seed == 1)
+    single = run_scenario(matrix[idx], "training")
+    np.testing.assert_allclose(batched[idx].series["loss"], single.series["loss"],
+                               rtol=2e-4, atol=1e-6)
+    # different problem seeds genuinely differ
+    other = next(i for i, s in enumerate(matrix)
+                 if s.seed == 2 and training_shape_key(s) == training_shape_key(matrix[idx])
+                 and s.lr == matrix[idx].lr
+                 and s.compressor_kwargs == matrix[idx].compressor_kwargs)
+    assert np.abs(batched[idx].series["loss"] - batched[other].series["loss"]).max() > 1e-6
 
 
 def test_classbatch_rejects_mixed_shape_classes():
