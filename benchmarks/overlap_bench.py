@@ -1,0 +1,179 @@
+"""Paper §VII made executable: the overlap axis on the REAL mesh trainer.
+
+Sequential vs microbatch-pipelined bucketized aggregation x bucket sizes x
+{none, qsgd, topk} compressors on a forced-host multi-device mesh — the
+acceptance sweep behind ``BENCH_overlap.json`` at the repo root.  Per cell
+it records the measured per-step wall-clock, the wire bytes, and (for
+pipelined cells) the measured overlap saving vs the sequential twin next to
+the ``simulate_schedule`` prediction (predicted-vs-measured, the Shi et al.
+methodology).  Asserts:
+
+* pipelined loss trajectories are unchanged-or-equal: every pipelined cell's
+  final loss stays within a few percent of its sequential twin, and the
+  staleness-1 degradation matches the simulator's ``ssp(s=1)`` reference
+  band (both are ~1.0x the synchronous final loss);
+* pipelined cells are bit-reproducible across bundle-cache hits (a re-run
+  through the shared compiled bundle reproduces the loss series exactly);
+* the bundle registry builds at most one bundle per shape class — cells
+  differing only in traced overlap/compressor knobs reuse compiles.
+
+NOTE: a measured wall-clock IMPROVEMENT is *not* asserted — on forced host
+devices XLA's latency-hiding scheduler has no real NIC to overlap, so the
+pipelined path usually pays for its extra collective rounds; the record
+exists to track the saving on real multi-chip meshes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.experiments import Scenario
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_overlap.json")
+
+#: compressor axis: dense, quantized (unbiased, EF-free — per-microbatch EF
+#: compounds quantization noise, a real finding the sweep records), sparse+EF
+FAMILIES = ((None, {}, False),
+            ("qsgd", {"levels": 16}, False),
+            ("topk", {"ratio": 0.05}, True))
+
+
+def overlap_matrix(*, steps: int = 16, n_workers: int = 2, microbatch: int = 4,
+                   seed: int = 0) -> list[Scenario]:
+    """3 compressor families x 2 bucket granularities x {sequential,
+    pipelined} = 12 cells (12 shape classes), plus 2 knob-traced siblings of
+    one pipelined class (qsgd levels, stale_scale) that must be bundle-cache
+    hits — 14 cells, 12 builds."""
+    cells = []
+    for comp, kw, ef in FAMILIES:
+        for bucket in (0.0, 0.25e6):
+            for overlap in ("sequential", "pipelined"):
+                cells.append(Scenario(
+                    sync="bsp", n_workers=n_workers, steps=steps, lr=0.05,
+                    compressor=comp, compressor_kwargs=kw, error_feedback=ef,
+                    schedule=("mgwfbp" if bucket else "wfbp"),
+                    bucket_bytes=bucket, overlap=overlap,
+                    microbatch=microbatch, seed=seed))
+    sib = next(c for c in cells
+               if c.overlap == "pipelined" and c.compressor == "qsgd"
+               and c.bucket_bytes == 0)
+    cells.append(sib.replace(compressor_kwargs={"levels": 8}))
+    cells.append(sib.replace(stale_scale=0.5))
+    return cells
+
+
+def _staleness_reference() -> dict:
+    """The simulator's ssp(s=1) convergence reference: staleness 1 leaves
+    the final loss within a whisker of the synchronous trajectory."""
+    from repro.core.simulate import SimCfg, simulate_training_batch
+
+    bsp = simulate_training_batch(SimCfg(n_workers=8, sync="bsp", steps=200,
+                                         lr=0.05, seed=0))[0]
+    ssp = simulate_training_batch(SimCfg(n_workers=8, sync="ssp", staleness=1,
+                                         steps=200, lr=0.05, seed=0))[0]
+    return {
+        "sim_bsp_final_loss": float(bsp["loss"][-1]),
+        "sim_ssp1_final_loss": float(ssp["loss"][-1]),
+        "sim_ssp1_ratio": float(ssp["loss"][-1] / bsp["loss"][-1]),
+    }
+
+
+def run() -> list[Row]:
+    from repro.experiments.trainer_substrate import (
+        _overlap_twin,
+        run_trainer_scenario,
+        run_trainer_sweep,
+        trainer_shape_key,
+    )
+    from repro.train.steps import bundle_cache_clear, bundle_cache_stats
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return [Row("overlap/sweep", 0.0,
+                    "skipped: needs >=2 devices (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=4)")]
+
+    cells = overlap_matrix()
+    classes = {trainer_shape_key(s, data_par=min(s.n_workers, ndev))
+               for s in cells}
+    bundle_cache_clear()
+    t0 = time.perf_counter()
+    results, skipped = run_trainer_sweep(cells, n_devices=ndev)
+    sweep_s = time.perf_counter() - t0
+    assert not skipped, skipped
+    st = bundle_cache_stats()
+    assert st.builds <= len(classes), (st, len(classes))
+    assert st.hits == len(cells) - st.builds, st
+
+    by_cell = {r.scenario: r for r in results}
+    pair_rows = []
+    worst_ratio = 0.0
+    for r in results:
+        s = r.scenario
+        if s.overlap != "pipelined":
+            continue
+        twin = by_cell.get(_overlap_twin(s))
+        if twin is None:
+            continue
+        ratio = r.measured["final_loss"] / twin.measured["final_loss"]
+        worst_ratio = max(worst_ratio, ratio)
+        pair_rows.append({
+            "tag": r.tag,
+            "sequential_tag": twin.tag,
+            "loss_ratio_vs_sequential": ratio,
+            "measured_overlap_saving_s": r.measured.get("overlap_saving_s"),
+            "predicted_overlap_saving_s": r.predicted.get("overlap_saving_s"),
+        })
+
+    # unchanged-or-equal trajectories: staleness-1 costs at most a few
+    # percent of final loss, the same band the ssp(s=1) simulator sits in
+    ref = _staleness_reference()
+    assert ref["sim_ssp1_ratio"] < 1.05, ref
+    assert worst_ratio < 1.05, (worst_ratio, pair_rows)
+
+    # bit-reproducibility across bundle-cache hits: a re-run of a pipelined
+    # cell through the (now cached) compiled bundle is exact
+    repro_cell = next(s for s in cells
+                      if s.overlap == "pipelined" and s.compressor is None)
+    again = run_trainer_scenario(repro_cell, data_par=min(repro_cell.n_workers, ndev))
+    np.testing.assert_array_equal(
+        again.series["loss_full"], by_cell[repro_cell].series["loss_full"],
+        err_msg="pipelined cell not bit-reproducible across bundle-cache hits")
+
+    record = {
+        "n_cells": len(cells),
+        "n_shape_classes": len(classes),
+        "steps": cells[0].steps,
+        "microbatch": cells[0].microbatch,
+        "n_devices": ndev,
+        "builds": st.builds,
+        "cache_hits": st.hits,
+        "sweep_wall_clock_s": sweep_s,
+        "worst_pipelined_loss_ratio": worst_ratio,
+        "staleness_reference": ref,
+        "pairs": pair_rows,
+        "cells": [{
+            "tag": r.tag,
+            "measured": dict(r.measured),
+            "predicted": dict(r.predicted),
+        } for r in results],
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+
+    return [
+        Row("overlap/sweep", sweep_s * 1e6,
+            f"{len(cells)} cells -> {len(classes)} classes, {st.builds} builds "
+            f"({st.hits} hits)"),
+        Row("overlap/loss_ratio", 0.0,
+            f"worst pipelined/sequential={worst_ratio:.4f} "
+            f"(sim ssp1 ref {ref['sim_ssp1_ratio']:.4f})"),
+        Row("overlap/claims_validated", 0.0, True),
+    ]

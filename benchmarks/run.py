@@ -20,6 +20,7 @@ MODULES = (
     ("tableIV_convergence", "benchmarks.convergence"),
     ("sweep_batched", "benchmarks.sweep"),
     ("sec7_schedule", "benchmarks.schedule_table"),
+    ("sec7_overlap", "benchmarks.overlap_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("train_micro", "benchmarks.train_micro"),
 )

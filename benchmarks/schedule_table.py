@@ -1,5 +1,6 @@
 """Paper §VII: scheduling of communication and computing — iteration time
-under sequential / WFBP / MG-WFBP schedules for a ResNet-50-like and a
+under sequential / WFBP / MG-WFBP / pipelined (double-buffered staleness-1,
+the schedule the mesh trainer executes) for a ResNet-50-like and a
 transformer-like layer profile; bucket-size sweep (MG-WFBP's knob) —
 declared as scenarios on the engine's schedule substrate."""
 
@@ -16,22 +17,38 @@ def run() -> list[Row]:
     for profile in ("resnet50", "transformer32"):
         base = None
         times = {}
-        for mode, bucket in (("sequential", 0), ("wfbp", 0), ("mgwfbp", 8e6), ("mgwfbp", 64e6)):
+        saving = {}
+        grid = (("sequential", 0, 1), ("wfbp", 0, 1), ("mgwfbp", 8e6, 1),
+                ("mgwfbp", 64e6, 1), ("pipelined", 8e6, 0), ("pipelined", 8e6, 1))
+        for mode, bucket, stale in grid:
             s = Scenario(schedule=mode, bucket_bytes=bucket, layer_profile=profile,
-                         n_workers=64, **LINK)
+                         n_workers=64, overlap_staleness=stale, **LINK)
             res = run_scenario(s, "schedule")
             m = res.measured
-            times[(mode, bucket)] = m["iter_time"]
-            tag = mode if mode != "mgwfbp" else f"mgwfbp_{int(bucket/1e6)}MB"
+            times[(mode, bucket, stale)] = m["iter_time"]
+            saving[(mode, bucket, stale)] = m["overlap_saving"]
+            tag = mode if bucket == 0 else f"{mode}_{int(bucket/1e6)}MB"
+            if mode == "pipelined":
+                tag += f"_s{stale}"
             if base is None:
                 base = m["iter_time"]
             rows.append(Row(
                 f"schedule/{profile}/{tag}", 0.0,
                 f"iter={m['iter_time']*1e3:.2f}ms msgs={int(m['n_messages'])} "
                 f"speedup={base/m['iter_time']:.2f}x "
+                f"saving={m['overlap_saving']*1e3:.2f}ms "
                 f"(pred no-overlap {res.predicted['no_overlap_time']*1e3:.2f}ms)",
             ))
-        assert times[("wfbp", 0)] <= times[("sequential", 0)] + 1e-9
-        assert times[("mgwfbp", 8e6)] <= times[("wfbp", 0)] + 1e-9
+            # overlap_saving is consistently no_overlap - iter_time
+            assert abs((m["bwd_time"] + m["total_comm_time"] - m["iter_time"])
+                       - m["overlap_saving"]) < 1e-12
+        assert times[("wfbp", 0, 1)] <= times[("sequential", 0, 1)] + 1e-9
+        assert times[("mgwfbp", 8e6, 1)] <= times[("wfbp", 0, 1)] + 1e-9
+        # staleness-1 pipelining dominates every producer-ordered schedule
+        # (messages start at t=0) and its saving caps at min(bwd, comm)
+        assert times[("pipelined", 8e6, 1)] <= times[("mgwfbp", 8e6, 1)] + 1e-9
+        assert times[("pipelined", 8e6, 1)] <= times[("pipelined", 8e6, 0)] + 1e-9
+        assert saving[("pipelined", 8e6, 1)] >= saving[("mgwfbp", 8e6, 1)] - 1e-9
+        assert abs(saving[("sequential", 0, 1)]) < 1e-12
     rows.append(Row("schedule/claims_validated", 0.0, True))
     return rows

@@ -4,9 +4,9 @@ per-step collective wire bytes from the bundle's build-time accounting
 artifact (``StepBundle.wire`` — exact even when the bundle registry serves
 a cached compile).
 
-With >= 2 devices (CI forces host devices) it also runs the fixed 8-cell
+With >= 2 devices (CI forces host devices) it also runs the fixed 16-cell
 trainer-lane acceptance sweep (2 sync schemes x 2 compressor families x
-2 knob values = 4 shape classes), asserting the bundle registry builds at
+4 knob values = 4 shape classes), asserting the bundle registry builds at
 most one bundle per class and that cache-reused steps reproduce per-cell
 built losses, and writes the wall-clock record to ``BENCH_trainer.json``
 at the repo root."""
@@ -82,9 +82,10 @@ def run() -> list[Row]:
 
 
 def _trainer_sweep_rows() -> list[Row]:
-    """The BENCH_trainer.json record: the 8-cell / 4-class acceptance sweep,
-    bundle builds vs per-cell rebuilds, on >= 2 forced host devices (the CI
-    smoke lane sets XLA_FLAGS); skipped with a note on a 1-device host."""
+    """The BENCH_trainer.json record: the 16-cell / 4-class acceptance
+    sweep (builds-per-cells amortization), bundle builds vs per-cell
+    rebuilds, on >= 2 forced host devices (the CI smoke lane sets
+    XLA_FLAGS); skipped with a note on a 1-device host."""
     from repro.experiments.trainer_substrate import measure_trainer_sweep
 
     ndev = len(jax.devices())

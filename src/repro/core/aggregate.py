@@ -231,23 +231,21 @@ def _aggregate_one(
     return agg, self_hat
 
 
-def aggregate_gradients(
+def aggregate_buckets(
     comm: CommConfig,
     plan: BucketPlan,
-    grads: Any,
+    bufs: list[jax.Array],
     comm_state: dict[str, Any],
     key: jax.Array,
     axes: tuple[str, ...],
     knobs: dict[str, Any] | None = None,
-) -> tuple[Any, dict[str, Any]]:
-    """The full §II pipeline over a gradient pytree. Functional state update.
+) -> tuple[list[jax.Array], dict[str, Any]]:
+    """The §II pipeline over already-gathered flat bucket vectors.
 
-    ``knobs`` is the traced :class:`repro.core.types.CommKnobs` tree of the
-    cell (``knobs["comp"][i]`` per bucket, plus ef_decay / momentum /
-    local_clip scalars); without it every value bakes from ``comm`` as
-    before — the two paths compute identically."""
-    leaves, treedef = jax.tree.flatten(grads)
-    bufs = _gather_buckets(plan, leaves)
+    This is the granularity the pipelined-overlap step (§VII) works at: the
+    microbatch scan carries bucket buffers and issues these collectives with
+    no data dependency on the next microbatch's compute.  Functional state
+    update; safe inside ``lax.scan`` (every shape is static)."""
     n_workers = 1
     for axn in axes:
         n_workers *= compat_axis_size(axn)
@@ -287,5 +285,28 @@ def aggregate_gradients(
                 feedback.post_compress(comm, a, self_hat, state, i)
             out_bufs.append(agg)
     state["step"] = state["step"] + 1
+    return out_bufs, state
+
+
+def aggregate_gradients(
+    comm: CommConfig,
+    plan: BucketPlan,
+    grads: Any,
+    comm_state: dict[str, Any],
+    key: jax.Array,
+    axes: tuple[str, ...],
+    knobs: dict[str, Any] | None = None,
+) -> tuple[Any, dict[str, Any]]:
+    """The full §II pipeline over a gradient pytree. Functional state update.
+
+    ``knobs`` is the traced :class:`repro.core.types.CommKnobs` tree of the
+    cell (``knobs["comp"][i]`` per bucket, plus ef_decay / momentum /
+    local_clip scalars); without it every value bakes from ``comm`` as
+    before — the two paths compute identically."""
+    leaves, treedef = jax.tree.flatten(grads)
+    bufs = _gather_buckets(plan, leaves)
+    out_bufs, state = aggregate_buckets(
+        comm, plan, bufs, comm_state, key, axes, knobs=knobs
+    )
     new_leaves = _scatter_buckets(plan, out_bufs, leaves)
     return jax.tree.unflatten(treedef, new_leaves), state

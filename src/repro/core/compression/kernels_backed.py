@@ -4,13 +4,13 @@ Same wire semantics as their jnp counterparts (tested equal), but the
 compression pass is a single fused VMEM-tiled kernel, and SignSGD gets true
 1-bit packing (32x wire reduction — int8 payloads are only 4x).
 
-Batchability note: these classes declare NO ``BATCH_KNOBS`` — a Pallas
-kernel specializes on its quantization constants (``levels`` is a
-``static_argnames`` of the ops wrappers), so the knob is *structural* and
-stays in the shape fingerprint: two ``qsgd_kernel`` cells with different
-levels are different shape classes (unlike the jnp ``qsgd``, whose levels
-trace).  The fused EF kernel still runs inside the batched sweep via the
-``compress_decompress_ef`` dispatch in ``base.roundtrip_bits_ef``.
+Batchability note: ``qsgd_kernel`` passes ``levels`` into the kernel as a
+TRACED (1,1) scalar block (mask-style, like the top-k rank mask) rather
+than a specialization constant, so it declares ``BATCH_KNOBS`` /
+``RUNTIME_KNOBS`` exactly like the jnp ``qsgd`` — sweep cells that differ
+only in levels share one compiled program at both layers
+(``engine_cache_stats`` asserts it in tests/test_sweep_batched.py).  The
+fused EF kernel runs inside the batched sweep via ``roundtrip_ef_p``.
 """
 
 from __future__ import annotations
@@ -32,20 +32,57 @@ class QSGDKernel:
     levels: int = 16
     unbiased: bool = True
     reduce_mode: str = "none"
+    BATCH_KNOBS = ("levels",)
+    RUNTIME_KNOBS = ("levels",)
 
-    def compress(self, key, x) -> Compressed:
+    def _check(self):
+        # the int8 wire format caps |code| at s — fail loudly, don't wrap
+        if self.levels > 127:
+            raise ValueError(f"qsgd_kernel levels={self.levels} exceeds the "
+                             "int8 wire format (max 127)")
+        return {"levels": self.levels}
+
+    def batch_params(self, dim: int) -> dict:
+        return self._check()
+
+    def runtime_params(self) -> dict:
+        return self._check()
+
+    def compress_p(self, key, x, p) -> Compressed:
         u = jax.random.uniform(key, x.shape)
-        codes, norm = ops.qsgd_quantize(x, u, levels=self.levels)
+        codes, norm = ops.qsgd_quantize(x, u, levels=p.get("levels", self.levels))
         return Compressed({"code": codes, "norm": norm}, x.size)
 
+    def decompress_p(self, c, p) -> jax.Array:
+        return ops.qsgd_dequantize(c.payload["code"], c.payload["norm"],
+                                   levels=p.get("levels", self.levels))
+
+    def compress(self, key, x) -> Compressed:
+        return self.compress_p(key, x, {})
+
     def decompress(self, c) -> jax.Array:
-        return ops.qsgd_dequantize(c.payload["code"], c.payload["norm"], levels=self.levels)
+        return self.decompress_p(c, {})
+
+    def _bits(self, n, p) -> jax.Array:
+        s = jnp.asarray(p.get("levels", self.levels), f32)
+        return n * (jnp.log2(s) + 1.0) + 32.0
+
+    def roundtrip_p(self, key, x, p):
+        c = self.compress_p(key, x, p)
+        return self.decompress_p(c, p), self._bits(x.size, p)
+
+    def roundtrip_ef_p(self, key, g, e, p):
+        """Fused EF+quantize (one Pallas pass instead of three dense ones),
+        with levels traced."""
+        lv = p.get("levels", self.levels)
+        u = jax.random.uniform(key, g.shape)
+        codes, norm, e_new = ops.qsgd_ef_fused(g, e, u, levels=lv)
+        return ops.qsgd_dequantize(codes, norm, levels=lv), e_new, self._bits(g.size, p)
 
     def compress_decompress_ef(self, key, g, e):
-        """Fused EF+quantize (one Pallas pass instead of three dense ones)."""
-        u = jax.random.uniform(key, g.shape)
-        codes, norm, e_new = ops.qsgd_ef_fused(g, e, u, levels=self.levels)
-        return ops.qsgd_dequantize(codes, norm, levels=self.levels), e_new
+        """Knob-free fused path (kept for direct callers)."""
+        out, e_new, _ = self.roundtrip_ef_p(key, g, e, {})
+        return out, e_new
 
     def wire_bits(self, n) -> float:
         import math

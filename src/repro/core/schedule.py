@@ -6,7 +6,14 @@ DAG cost model of one backward pass + gradient communication:
 * WFBP [63,47]: layer l's all-reduce starts as soon as its gradient is
   ready, overlapping with layer l-1's computation;
 * MG-WFBP [64]: WFBP + merging consecutive small tensors into buckets so
-  the per-message latency term stops dominating.
+  the per-message latency term stops dominating;
+* pipelined: the double-buffered staleness-1 schedule the mesh trainer
+  realizes (train/steps.py, ``CommConfig.overlap="pipelined"``): every
+  (bucketized) message carries the PREVIOUS iteration's gradients, so it has
+  no dependency on this iteration's compute and can start at t=0 — comm
+  hides behind compute entirely, bounded only by the single-NIC serial comm
+  time.  ``staleness=0`` is the flush variant: messages wait for their
+  producer (WFBP-with-buckets starts), no gradient staleness.
 
 The same bucket plan object drives the *runtime* (aggregate.make_bucket_plan)
 — this model predicts the iteration time each plan implies, and
@@ -33,14 +40,20 @@ def simulate_schedule(
     n_workers: int,
     link: Link = Link(),
     alg: str = "ring",
-    mode: str = "wfbp",  # sequential | wfbp | mgwfbp
+    mode: str = "wfbp",  # sequential | wfbp | mgwfbp | pipelined
     bucket_bytes: float = 0.0,
+    staleness: int = 1,  # pipelined only: 1 = double-buffered, 0 = flush
 ) -> dict:
     """Iteration time of backward+comm under the given schedule.
 
     Backward runs last-layer-first; communication of a (merged) bucket can
-    start once every layer in it has produced its gradient, and messages
-    serialize on the network link (single NIC model).
+    start once every layer in it has produced its gradient — or, under the
+    ``pipelined`` staleness-1 schedule, immediately (the message carries the
+    previous iteration's gradients) — and messages serialize on the network
+    link (single NIC model).  ``overlap_saving`` is always
+    ``no_overlap_time - iter_time``, where ``no_overlap_time`` serializes the
+    full backward and every message (the sequential bound), so the saving is
+    comparable across every mode, 0 for ``sequential`` by construction.
     """
     # backward completes layer by layer (reverse order)
     t = 0.0
@@ -50,7 +63,19 @@ def simulate_schedule(
         ready[spec.name] = t
     bwd_end = t
 
-    # build buckets
+    def merge_buckets():
+        out, cur, size = [], [], 0.0
+        for s in reversed(layers):
+            cur.append(s)
+            size += s.grad_bytes
+            if size >= bucket_bytes:
+                out.append(cur)
+                cur, size = [], 0.0
+        if cur:
+            out.append(cur)
+        return out
+
+    # build buckets + the start rule
     if mode == "sequential":
         # per-layer messages, none started before the whole backward is done
         buckets = [[s] for s in reversed(layers)]
@@ -59,32 +84,38 @@ def simulate_schedule(
         buckets = [[s] for s in reversed(layers)]
         start_rule = "ready"
     elif mode == "mgwfbp":
-        buckets, cur, size = [], [], 0.0
-        for s in reversed(layers):
-            cur.append(s)
-            size += s.grad_bytes
-            if size >= bucket_bytes:
-                buckets.append(cur)
-                cur, size = [], 0.0
-        if cur:
-            buckets.append(cur)
+        buckets = merge_buckets()
         start_rule = "ready"
+    elif mode == "pipelined":
+        buckets = merge_buckets() if bucket_bytes > 0 else [[s] for s in reversed(layers)]
+        # staleness >= 1: every message is the previous iteration's grads —
+        # no producer dependency, start at t=0; staleness 0 = flush variant
+        start_rule = "immediate" if staleness >= 1 else "ready"
     else:
         raise ValueError(mode)
 
     net_free = 0.0
-    finish = 0.0
+    total_comm = 0.0
     for bucket in buckets:
         nbytes = sum(s.grad_bytes for s in bucket)
-        ready_t = bwd_end if start_rule == "all" else max(ready[s.name] for s in bucket)
+        if start_rule == "all":
+            ready_t = bwd_end
+        elif start_rule == "immediate":
+            ready_t = 0.0
+        else:
+            ready_t = max(ready[s.name] for s in bucket)
         start = max(ready_t, net_free)
         dur = allreduce_cost(alg, n_workers, nbytes, link)
         net_free = start + dur
-        finish = net_free
+        total_comm += dur
+    # a fully hidden comm tail still waits for the backward to finish
+    finish = max(net_free, bwd_end)
+    no_overlap = bwd_end + total_comm
     return {
         "iter_time": finish,
         "bwd_time": bwd_end,
         "comm_time": finish - bwd_end if finish > bwd_end else 0.0,
+        "total_comm_time": total_comm,
         "n_messages": len(buckets),
-        "overlap_saving": (bwd_end + sum(allreduce_cost(alg, n_workers, sum(s.grad_bytes for s in b), link) for b in buckets)) - finish,
+        "overlap_saving": no_overlap - finish,
     }

@@ -14,7 +14,8 @@ runtime it splits the same way the simulator's ``SimCfg`` split into
 * :class:`CommKnobs` — the TRACED half: values that ride into the compiled
   programs as arguments (compressor knobs via the ``RUNTIME_KNOBS``
   protocol, EF decay, momentum-correction coefficient, clip thresholds,
-  gossip step size / mixing weight, the stochastic-compression seed).
+  gossip step size / mixing weight, the pipelined-overlap stale-gradient
+  scale, the stochastic-compression seed).
   ``lr`` was already a traced step argument; Local-SGD ``H`` and the
   post-local switch never enter a compiled program at all — the Trainer
   applies them as Python-level step-count comparisons (repro.core.sync), so
@@ -65,6 +66,20 @@ class CommConfig:
     # --- scheduling (paper §VII) -------------------------------------------------
     bucket_mb: float = 0.0  # 0 = per-tensor; >0 = MG-WFBP-style fused buckets
     agg_dtype: str = "float32"  # bucket dtype for the dense path ("bfloat16" halves wire)
+    #: parallelism of communication and computing (§VII): "sequential"
+    #: aggregates once after the full (accumulated) backward; "pipelined"
+    #: issues each microbatch's bucket all-reduces inside the accumulation
+    #: scan with no data dependency on the NEXT microbatch's forward/backward,
+    #: so XLA's latency-hiding scheduler can overlap them.
+    overlap: str = "sequential"  # sequential | pipelined
+    #: pipelined only: 1 = double-buffered across the step boundary (the last
+    #: microbatch's aggregation is consumed by the NEXT step — every
+    #: collective fully overlappable, gradient staleness 1); 0 = flush the
+    #: last microbatch after the scan (no staleness; the flush is exposed).
+    overlap_staleness: int = 1
+    #: weight applied to the stale (previous-step) microbatch contribution in
+    #: the staleness-1 pipelined update (traced knob; 1.0 = plain average).
+    stale_scale: float = 1.0
 
     def with_updates(self, **kw) -> "CommConfig":
         return dataclasses.replace(self, **kw)
@@ -103,6 +118,10 @@ class BundleSpec:
     rules_key: tuple
     bucket_mb: float
     agg_dtype: str
+    overlap: str = "sequential"
+    #: normalized to 0 for sequential cells so the inert knob never splits a
+    #: shape class
+    overlap_staleness: int = 0
 
 
 def bundle_spec(comm: CommConfig) -> BundleSpec:
@@ -114,6 +133,18 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
     """
     from repro.core.compression.base import get_compressor, runtime_fingerprint
 
+    if comm.overlap not in ("sequential", "pipelined"):
+        raise ValueError(f"unknown overlap mode {comm.overlap!r}")
+    if comm.overlap_staleness not in (0, 1):
+        raise ValueError(f"overlap_staleness must be 0 or 1, got {comm.overlap_staleness!r}")
+    if (comm.overlap == "pipelined" and comm.aggregator != "gossip"
+            and comm.sync != "bsp"):
+        # the double buffer is refilled only by the AGGREGATING step: under
+        # local/post_local sync that fires every H steps, so the "staleness-1"
+        # contribution would silently be H steps old
+        raise ValueError(
+            "pipelined overlap needs per-step aggregation (sync must be bsp, "
+            f"got {comm.sync!r})")
     comp = get_compressor(comm.compressor, **comm.compressor_kwargs)
     return BundleSpec(
         sync=comm.sync,
@@ -133,6 +164,12 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
         ),
         bucket_mb=float(comm.bucket_mb),
         agg_dtype=comm.agg_dtype,
+        # overlap restructures gradient AGGREGATION: inert for gossip (which
+        # mixes parameters) — normalized away so it never splits a class
+        overlap=(comm.overlap if comm.aggregator != "gossip" else "sequential"),
+        overlap_staleness=(int(comm.overlap_staleness)
+                           if comm.overlap == "pipelined"
+                           and comm.aggregator != "gossip" else 0),
     )
 
 
@@ -153,6 +190,7 @@ class CommKnobs:
     gossip_gamma: float = 0.5
     gossip_w: float = 1.0 / 3.0
     clip_norm: float = 0.0
+    stale_scale: float = 1.0
     seed: int = 0
     comp: tuple = ()  # per-bucket dict of traced compressor knob values
 
@@ -166,6 +204,7 @@ class CommKnobs:
             gossip_gamma=comm.gossip_step_size,
             gossip_w=comm.gossip_mix_weight,
             clip_norm=clip_norm,
+            stale_scale=comm.stale_scale,
             seed=seed,
             comp=comp_per_bucket,
         )
@@ -181,6 +220,7 @@ class CommKnobs:
             "gossip_gamma": jnp.asarray(self.gossip_gamma, f32),
             "gossip_w": jnp.asarray(self.gossip_w, f32),
             "clip_norm": jnp.asarray(self.clip_norm, f32),
+            "stale_scale": jnp.asarray(self.stale_scale, f32),
             "seed": jnp.asarray(self.seed, jnp.int32),
             "comp": [
                 {k: jnp.asarray(v, f32) for k, v in d.items()} for d in self.comp

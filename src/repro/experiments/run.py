@@ -22,7 +22,11 @@ fits the available devices; cells that cannot run are skipped with the
 reason on stderr) — jax is imported lazily so the lane can force host
 devices first, and the sweep is grouped by trainer shape class so cells
 sharing a static ``BundleSpec`` reuse ONE compiled bundle (``--emit-json``
-gains the ``bundle`` build/hit record).
+gains the ``bundle`` build/hit record).  The overlap axis runs here too:
+``--grid "... overlap=sequential,pipelined microbatch=4"`` sweeps
+microbatch-pipelined vs post-hoc aggregation, and pipelined cells carry
+predicted (``simulate_schedule``) and, when their sequential twin is in the
+sweep, measured overlap saving.
 
 ``--substrate roofline`` emits the analytic per-cell dry-run prediction
 (compute/memory/collective roofline terms); ``--emit-json PATH`` records

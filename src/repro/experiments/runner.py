@@ -494,6 +494,7 @@ def run_scenario(s: Scenario, substrate: str = "timeline", *, replicas: int = 1)
             alg=s.allreduce_alg,
             mode=s.schedule,
             bucket_bytes=s.bucket_bytes,
+            staleness=s.overlap_staleness,
         )
         measured = {k: float(v) for k, v in r.items()}
         return ScenarioResult(s, substrate, measured, pred, replicas=1)

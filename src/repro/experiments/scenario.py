@@ -25,7 +25,8 @@ from typing import Any, Iterable, Mapping
 
 SYNC_SCHEMES = ("bsp", "ssp", "asp", "local", "post_local")
 ARCHITECTURES = ("ps", "allreduce", "gossip")
-SCHEDULE_MODES = ("sequential", "wfbp", "mgwfbp")
+SCHEDULE_MODES = ("sequential", "wfbp", "mgwfbp", "pipelined")
+OVERLAP_MODES = ("sequential", "pipelined")
 SUBSTRATES = ("timeline", "training", "schedule", "roofline", "trainer")
 
 #: sync schemes that only exist in the simulators (no single SPMD program
@@ -66,8 +67,16 @@ class Scenario:
     error_feedback: bool = False
 
     # --- scheduling (§VII) ---------------------------------------------------
-    schedule: str = "wfbp"  # sequential | wfbp | mgwfbp
-    bucket_bytes: float = 0.0  # MG-WFBP bucket size (bytes)
+    schedule: str = "wfbp"  # sequential | wfbp | mgwfbp | pipelined (DAG model)
+    bucket_bytes: float = 0.0  # MG-WFBP / runtime bucket size (bytes)
+    #: EXECUTABLE overlap axis (trainer substrate): "pipelined" issues each
+    #: microbatch's bucket all-reduces inside the gradient-accumulation scan
+    #: with no data dependency on the next microbatch's compute; the DAG
+    #: model's counterpart is ``schedule="pipelined"``.
+    overlap: str = "sequential"  # sequential | pipelined
+    overlap_staleness: int = 1  # pipelined: 1 = cross-step double buffer, 0 = flush
+    stale_scale: float = 1.0  # weight of the stale contribution (traced knob)
+    microbatch: int = 1  # gradient-accumulation microbatches (trainer)
 
     # --- workload ------------------------------------------------------------
     objective: str = "quadratic"  # training substrate: quadratic | logistic
@@ -123,7 +132,11 @@ class Scenario:
             comp += "_ef"
         sched = self.schedule
         if sched == "mgwfbp":
-            sched += f"_{int(self.bucket_bytes / 1e6)}MB"
+            sched += f"_{self.bucket_bytes / 1e6:g}MB"
+        if self.overlap == "pipelined":
+            sched += f"+pipe_s{self.overlap_staleness}"
+            if self.microbatch > 1:
+                sched += f"_mb{self.microbatch}"
         return f"{sync}/{arch}/{comp}/{sched}"
 
     def replace(self, **kw) -> "Scenario":
@@ -154,6 +167,20 @@ class Scenario:
             v.append("error feedback without a compressor is a no-op")
         if self.schedule == "mgwfbp" and self.bucket_bytes <= 0:
             v.append("mgwfbp needs bucket_bytes > 0")
+        if self.overlap not in OVERLAP_MODES:
+            v.append(f"unknown overlap mode {self.overlap!r}")
+        if self.overlap_staleness not in (0, 1):
+            v.append("overlap_staleness must be 0 or 1")
+        if self.microbatch < 1:
+            v.append("microbatch must be >= 1")
+        if self.overlap == "pipelined":
+            # the pipeline restructures per-step gradient AGGREGATION: gossip
+            # mixes parameters instead, and non-BSP schemes make the step-1
+            # double buffer H-steps stale (meaningless)
+            if self.arch == "gossip":
+                v.append("pipelined overlap aggregates gradients (gossip mixes parameters)")
+            if self.sync != "bsp":
+                v.append("pipelined overlap needs per-step aggregation (sync must be bsp)")
         # pod-local is BSP inside each pod by construction; the loose outer
         # boundary is the Local-SGD axis — stale schemes don't compose.
         if self.pod_local and self.sync not in ("bsp", "local"):
@@ -167,6 +194,9 @@ class Scenario:
                 v.append(f"{self.sync} is simulate-only (no SPMD realization)")
             if substrate == "trainer" and self.arch == "ps":
                 v.append("the mesh runtime has no parameter server (simulate-only)")
+            if substrate not in ("trainer",) and self.overlap == "pipelined":
+                v.append("the overlap axis is runtime-only (the schedule "
+                         "substrate models it via schedule='pipelined')")
             if substrate == "training" and self.arch == "gossip" and self.sync != "bsp":
                 v.append("gossip training is a synchronous mixing round (sync must be bsp)")
         return v

@@ -33,13 +33,16 @@ _COLUMNS = {
     "schedule": (
         ("iter_time(ms)", "iter_time", None),
         ("comm_time(ms)", "comm_time", None),
+        ("saving(ms)", "overlap_saving", None),
         ("messages", "n_messages", None),
         ("no_overlap(ms)", None, "no_overlap_time"),
         ("overlap_bound(ms)", None, "full_overlap_bound"),
     ),
     "trainer": (
         ("final_loss", "final_loss", None),
+        ("step(ms)", "step_time_s", None),
         ("KB/step", "wire_kb_per_step", None),
+        ("saving(ms)", "overlap_saving_s", "overlap_saving_s"),
         ("sync_rounds", "sync_rounds", None),
     ),
     "roofline": (
@@ -53,9 +56,9 @@ _COLUMNS = {
 }
 
 _SCALE = {"GB/worker": 1e-9, "iter_time(ms)": 1e3, "comm_time(ms)": 1e3,
-          "no_overlap(ms)": 1e3, "overlap_bound(ms)": 1e3,
-          "compute(ms)": 1e3, "memory(ms)": 1e3, "collective(ms)": 1e3,
-          "bound(ms)": 1e3}
+          "no_overlap(ms)": 1e3, "overlap_bound(ms)": 1e3, "saving(ms)": 1e3,
+          "step(ms)": 1e3, "compute(ms)": 1e3, "memory(ms)": 1e3,
+          "collective(ms)": 1e3, "bound(ms)": 1e3}
 
 
 def _fmt(v) -> str:

@@ -37,6 +37,9 @@ def to_comm_config(s: Scenario):
         aggregator="gossip" if s.arch == "gossip" else "allreduce",
         gossip_compress=s.gossip_compress,
         bucket_mb=s.bucket_bytes / 1e6,
+        overlap=s.overlap,
+        overlap_staleness=s.overlap_staleness,
+        stale_scale=s.stale_scale,
     )
 
 
@@ -51,11 +54,12 @@ def select_trainer_device_count(
     bad = s.violations("trainer")
     if bad:
         return None, "; ".join(bad)
+    mb = max(1, s.microbatch)
     for dp in range(min(s.n_workers, n_devices), 1, -1):
-        if global_batch % dp == 0:
+        if global_batch % dp == 0 and (global_batch // dp) % mb == 0:
             return dp, ""
     return None, (f"needs a >=2-device mesh dividing batch {global_batch} "
-                  f"(have {n_devices} device(s))")
+                  f"into {mb} microbatches (have {n_devices} device(s))")
 
 
 def _phase_sync_steps(s: Scenario, steps: int) -> int:
@@ -100,14 +104,17 @@ def trainer_shape_key(s: Scenario, *, data_par: int | None = None,
                       model_par: int = 1) -> tuple:
     """Hashable trainer shape-class identity of a Scenario: the static
     :func:`repro.core.types.bundle_spec` of its CommConfig plus the mesh
-    extents.  Cells with equal keys share ONE compiled bundle
+    extents and the microbatch count (a scan-length build flag).  Cells with
+    equal keys share ONE compiled bundle
     (``train_step``/``sync_step``/``gossip_step``) through the bundle
     registry in :mod:`repro.train.steps`; everything else — lr, Local-H,
-    post-local switch, compressor value knobs, gossip weights — is either
-    traced or a Python-level trainer decision and deliberately absent."""
+    post-local switch, compressor value knobs, gossip weights, the pipelined
+    stale-gradient scale — is either traced or a Python-level trainer
+    decision and deliberately absent."""
     from repro.core.types import bundle_spec
 
-    return (bundle_spec(to_comm_config(s)), data_par or s.n_workers, model_par)
+    return (bundle_spec(to_comm_config(s)), data_par or s.n_workers, model_par,
+            max(1, s.microbatch))
 
 
 def trainer_wire_per_step(s: Scenario, wire: dict[str, dict[str, float]]) -> float:
@@ -131,6 +138,71 @@ def trainer_wire_per_step(s: Scenario, wire: dict[str, dict[str, float]]) -> flo
     return ga
 
 
+def plan_payload_bytes(plan) -> float:
+    """Analytic per-worker payload bytes ONE aggregation round of a
+    BucketPlan moves: the compressor's ``wire_bits`` per bucket (dense 32
+    bits/element without one; data-dependent NaN sizes — threshold-style —
+    fall back to the dense charge).  This is the payload quantity the
+    alpha-beta schedule model consumes — deliberately NOT derived from the
+    build-time wire artifact, whose per-device byte counts depend on the
+    collective algorithm each bucket used (psum vs all_gather)."""
+    total = 0.0
+    for b in plan.buckets:
+        comp = plan.compressor(b)
+        wb = comp.wire_bits(b.size) if comp is not None else b.size * 32.0
+        if wb != wb:  # NaN
+            wb = b.size * 32.0
+        total += wb / 8.0
+    return total
+
+
+def predict_overlap_saving(
+    s: Scenario,
+    *,
+    compute_s: float,
+    payload_round: float,
+    n_buckets: int,
+    data_par: int,
+) -> dict[str, float]:
+    """§VII prediction for one trainer cell: feed the cell's OWN message
+    structure (microbatch aggregation rounds x bucket-plan messages,
+    ``payload_round`` analytic payload bytes per round from
+    :func:`plan_payload_bytes`, compute time from the measured step) into
+    :func:`repro.core.schedule.simulate_schedule` and return the predicted
+    per-step times and overlap saving vs the sequential schedule of the same
+    cell.  The alpha-beta link comes from the Scenario, so the prediction is
+    an analytic-network quantity — on a forced-host mesh the measured saving
+    reflects scheduler/XLA effects instead, and the two are recorded side by
+    side (predicted-vs-measured, the Shi et al. methodology)."""
+    from repro.core.costmodel import Link
+    from repro.core.schedule import LayerSpec, simulate_schedule
+
+    n = max(2, data_par)
+    M = max(1, s.microbatch)
+    rounds = M if s.overlap == "pipelined" else 1
+    nb = max(1, n_buckets)
+    link = Link(alpha=s.alpha, beta=s.beta)
+
+    def simulate(n_rounds: int, mode: str) -> dict:
+        layers = [
+            LayerSpec(f"r{k}b{j}", grad_bytes=payload_round / nb,
+                      backward_time=compute_s / (n_rounds * nb))
+            for k in range(n_rounds) for j in range(nb)
+        ]
+        return simulate_schedule(layers, n_workers=n, link=link,
+                                 alg=s.allreduce_alg, mode=mode,
+                                 staleness=s.overlap_staleness)
+
+    seq = simulate(1, "sequential")
+    pipe = simulate(rounds, "pipelined")
+    own = pipe if s.overlap == "pipelined" else seq
+    return {
+        "iter_time": own["iter_time"],
+        "overlap_saving_s": seq["iter_time"] - pipe["iter_time"],
+        "comm_time": own["total_comm_time"],
+    }
+
+
 def run_trainer_scenario(
     s: Scenario,
     *,
@@ -141,10 +213,13 @@ def run_trainer_scenario(
     bundle_cache: bool = True,
 ) -> ScenarioResult:
     """Train the tiny workload under the scenario's CommConfig; measures
-    final loss, wire bytes per step (from the bundle's build-time wire
-    artifact, so cache-reused bundles keep exact accounting) and the number
-    of synchronization rounds.  ``bundle_cache=False`` forces a fresh
-    ``build_bundle`` — the per-cell baseline the sweep benchmark times."""
+    final loss, per-step wall-clock (compile excluded), wire bytes per step
+    (from the bundle's build-time wire artifact, so cache-reused bundles
+    keep exact accounting) and the number of synchronization rounds.  Cells
+    on the overlap axis additionally carry the ``simulate_schedule``
+    prediction of their per-step time and overlap saving.
+    ``bundle_cache=False`` forces a fresh ``build_bundle`` — the per-cell
+    baseline the sweep benchmark times."""
     import numpy as np
 
     from repro.launch.mesh import make_test_mesh
@@ -156,22 +231,42 @@ def run_trainer_scenario(
     comm = to_comm_config(s)
     cfg, shape, data = make_tiny_workload()
     dp = data_par or s.n_workers
+    mb = max(1, s.microbatch)
+    if (shape.global_batch // dp) % mb != 0:
+        raise ValueError(
+            f"{s.tag()}: local batch {shape.global_batch // dp} does not "
+            f"split into {mb} microbatches")
     mesh = make_test_mesh(data=dp, model=model_par)
 
     bundle = build_bundle(cfg, mesh, comm, momentum_sgd(momentum), shape,
-                          seed=s.seed, cache=bundle_cache)
-    trainer = Trainer(bundle, data, constant(s.lr),
-                      log_every=log_every or max(1, s.steps - 1))
+                          seed=s.seed, microbatch=mb, cache=bundle_cache)
+    trainer = Trainer(bundle, data, constant(s.lr), log_every=1)
     trainer.fit(trainer.init(), s.steps)
+
+    # per-step wall-clock with the compile excluded: first logged step pays
+    # the jit, the rest amortize
+    walls = [h["wall"] for h in trainer.history]
+    step_s = ((walls[-1] - walls[0]) / (len(walls) - 1)) if len(walls) > 1 else walls[0]
 
     measured: dict[str, Any] = {
         "final_loss": float(trainer.history[-1]["loss"]),
+        "step_time_s": float(step_s),
         "wire_kb_per_step": trainer_wire_per_step(s, bundle.wire or {}) / 1e3,
         "sync_rounds": float(sync_rounds(s, s.steps)),
     }
-    series = {"loss": np.asarray([h["loss"] for h in trainer.history])}
-    return ScenarioResult(s, "trainer", measured, predicted={}, replicas=1,
-                          series=series)
+    predicted: dict[str, Any] = {}
+    if s.overlap == "pipelined":
+        predicted = predict_overlap_saving(
+            s, compute_s=float(step_s),
+            payload_round=plan_payload_bytes(bundle.bucket_plan),
+            n_buckets=len(bundle.bucket_plan.buckets), data_par=dp)
+    every = log_every or max(1, s.steps - 1)
+    series = {"loss": np.asarray(
+        [h["loss"] for h in trainer.history
+         if h["step"] % every == 0 or h["step"] == s.steps - 1])}
+    series["loss_full"] = np.asarray([h["loss"] for h in trainer.history])
+    return ScenarioResult(s, "trainer", measured, predicted=predicted,
+                          replicas=1, series=series)
 
 
 # ---------------------------------------------------------------------------
@@ -238,19 +333,66 @@ def run_trainer_sweep(
             results[i] = run_trainer_scenario(
                 s, data_par=dp, model_par=model_par, momentum=momentum,
                 log_every=log_every, bundle_cache=bundle_cache)
+    _attach_measured_overlap_saving(results)
     return results, skipped
 
 
+def _overlap_twin(s: Scenario) -> Scenario:
+    """The canonical sequential form of a cell: the overlap mode reset and
+    its now-inert knobs normalized.  Applied to BOTH sides of the pairing,
+    so a pipelined cell finds its sequential twin regardless of the twin's
+    own (inert) staleness / stale-scale values."""
+    return s.replace(overlap="sequential", overlap_staleness=1, stale_scale=1.0)
+
+
+def _attach_measured_overlap_saving(results: list) -> None:
+    """Measured counterpart of :func:`predict_overlap_saving`: when a sweep
+    contains BOTH a pipelined cell and its sequential twin, the pipelined
+    cell's measured overlap saving is the twin's per-step wall-clock minus
+    its own — the quantity the BENCH_overlap record tracks against the
+    ``simulate_schedule`` prediction."""
+    seq_step: dict[Scenario, float] = {
+        _overlap_twin(r.scenario): r.measured["step_time_s"]
+        for r in results
+        if r is not None and r.scenario.overlap == "sequential"
+    }
+    for r in results:
+        if r is None or r.scenario.overlap != "pipelined":
+            continue
+        twin = seq_step.get(_overlap_twin(r.scenario))
+        if twin is not None:
+            r.measured["overlap_saving_s"] = twin - r.measured["step_time_s"]
+
+
 def trainer_matrix_8(*, steps: int = 24, n_workers: int = 4, seed: int = 0) -> list[Scenario]:
-    """The fixed trainer-lane acceptance sweep: 2 sync schemes (bsp, local)
-    x 2 compressor families (qsgd, terngrad) x 2 knob values = 8 cells
-    spanning exactly 4 shape classes — within a class only traced knob
-    values differ, so the sweep builds 4 bundles, not 8."""
+    """The original trainer-lane acceptance sweep: 2 sync schemes (bsp,
+    local) x 2 compressor families (qsgd, terngrad) x 2 knob values = 8
+    cells spanning exactly 4 shape classes.  Kept as the small fixture;
+    :func:`trainer_matrix_16` is the BENCH_trainer acceptance matrix."""
+    return _trainer_matrix(steps=steps, n_workers=n_workers, seed=seed,
+                           knobs_per_family=2)
+
+
+def trainer_matrix_16(*, steps: int = 24, n_workers: int = 4, seed: int = 0) -> list[Scenario]:
+    """The scaled trainer-lane acceptance sweep (the build cost amortizes
+    over more knob-traced cells per class): 2 sync schemes x 2 compressor
+    families x 4 knob values = 16 cells, still exactly 4 shape classes —
+    the sweep builds 4 bundles, not 16."""
+    return _trainer_matrix(steps=steps, n_workers=n_workers, seed=seed,
+                           knobs_per_family=4)
+
+
+def _trainer_matrix(*, steps: int, n_workers: int, seed: int,
+                    knobs_per_family: int) -> list[Scenario]:
+    families = (
+        ("qsgd", ({"levels": 4}, {"levels": 16}, {"levels": 8}, {"levels": 32})),
+        ("terngrad", ({"clip_sigma": 0.0}, {"clip_sigma": 2.5},
+                      {"clip_sigma": 1.5}, {"clip_sigma": 3.5})),
+    )
     cells = []
     for sync in ("bsp", "local"):
-        for comp, kwargs in (("qsgd", ({"levels": 4}, {"levels": 16})),
-                             ("terngrad", ({"clip_sigma": 0.0}, {"clip_sigma": 2.5}))):
-            for kw in kwargs:
+        for comp, kwargs in families:
+            for kw in kwargs[:knobs_per_family]:
                 cells.append(Scenario(
                     sync=sync, local_steps=4, n_workers=n_workers, steps=steps,
                     lr=0.1, compressor=comp, compressor_kwargs=kw,
@@ -274,7 +416,7 @@ def measure_trainer_sweep(
 
     from repro.train.steps import bundle_cache_clear, bundle_cache_stats
 
-    scenarios = trainer_matrix_8() if scenarios is None else list(scenarios)
+    scenarios = trainer_matrix_16() if scenarios is None else list(scenarios)
     classes = {trainer_shape_key(s, data_par=data_par, model_par=model_par)
                for s in scenarios if not s.violations("trainer")}
 

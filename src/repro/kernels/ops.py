@@ -31,33 +31,40 @@ def _to2d(x: jax.Array) -> tuple[jax.Array, int]:
     return xp.reshape(-1, _qsgd.LANES), n
 
 
-@functools.partial(jax.jit, static_argnames=("levels",))
-def qsgd_quantize(x: jax.Array, u: jax.Array, *, levels: int = 16) -> tuple[jax.Array, jax.Array]:
-    """Flat x, uniform noise u -> (codes int8 (n,), norm (1,) f32)."""
+@jax.jit
+def qsgd_quantize(x: jax.Array, u: jax.Array, *, levels=16) -> tuple[jax.Array, jax.Array]:
+    """Flat x, uniform noise u -> (codes int8 (n,), norm (1,) f32).
+
+    ``levels`` is TRACED (a value, not a jit specialization constant): cells
+    that differ only in levels share this compiled program."""
     norm = jnp.maximum(jnp.linalg.norm(x.astype(f32)), 1e-30)
     x2, n = _to2d(x.astype(f32))
     u2, _ = _to2d(u.astype(f32))
-    codes = _qsgd.qsgd_2d(x2, u2, (1.0 / norm).reshape(1, 1), levels=levels,
+    codes = _qsgd.qsgd_2d(x2, u2, (1.0 / norm).reshape(1, 1),
+                          jnp.asarray(levels, f32).reshape(1, 1),
                           interpret=_interpret())
     return codes.reshape(-1)[:n], norm[None]
 
 
-@functools.partial(jax.jit, static_argnames=("levels",))
-def qsgd_dequantize(codes: jax.Array, norm: jax.Array, *, levels: int = 16) -> jax.Array:
+@jax.jit
+def qsgd_dequantize(codes: jax.Array, norm: jax.Array, *, levels=16) -> jax.Array:
     """Inverse of qsgd_quantize / the codes half of qsgd_ef_fused."""
-    return codes.astype(f32) / levels * norm[0]
+    return codes.astype(f32) / jnp.asarray(levels, f32) * norm[0]
 
 
-@functools.partial(jax.jit, static_argnames=("levels", "decay"))
-def qsgd_ef_fused(g: jax.Array, e: jax.Array, u: jax.Array, *, levels: int = 16,
-                  decay: float = 1.0):
-    """Fused EF+quantize: returns (codes (n,) int8, norm (1,), e_new (n,))."""
+@jax.jit
+def qsgd_ef_fused(g: jax.Array, e: jax.Array, u: jax.Array, *, levels=16,
+                  decay=1.0):
+    """Fused EF+quantize: returns (codes (n,) int8, norm (1,), e_new (n,)).
+    ``levels`` and ``decay`` are traced scalars."""
+    decay = jnp.asarray(decay, f32)
     a_norm = jnp.maximum(jnp.linalg.norm((e * decay + g).astype(f32)), 1e-30)
     g2, n = _to2d(g.astype(f32))
     e2, _ = _to2d(e.astype(f32))
     u2, _ = _to2d(u.astype(f32))
     codes, enew = _qsgd_ef.qsgd_ef_2d(
-        g2, e2, u2, (1.0 / a_norm).reshape(1, 1), levels=levels, decay=decay,
+        g2, e2, u2, (1.0 / a_norm).reshape(1, 1),
+        jnp.asarray(levels, f32).reshape(1, 1), decay.reshape(1, 1),
         interpret=_interpret(),
     )
     return codes.reshape(-1)[:n], a_norm[None], enew.reshape(-1)[:n]

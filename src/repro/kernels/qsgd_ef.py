@@ -12,8 +12,6 @@ non-matmul pass of a compressed training step (see EXPERIMENTS.md §Perf).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -23,9 +21,10 @@ LANES = 128
 f32 = jnp.float32
 
 
-def _qsgd_ef_kernel(g_ref, e_ref, u_ref, inv_norm_ref, code_ref, enew_ref,
-                    *, levels: int, decay: float):
-    a = e_ref[...].astype(f32) * decay + g_ref[...].astype(f32)
+def _qsgd_ef_kernel(g_ref, e_ref, u_ref, inv_norm_ref, levels_ref, decay_ref,
+                    code_ref, enew_ref):
+    levels = levels_ref[0, 0]
+    a = e_ref[...].astype(f32) * decay_ref[0, 0] + g_ref[...].astype(f32)
     inv = inv_norm_ref[0, 0]
     y = jnp.abs(a) * inv * levels
     l = jnp.floor(y)
@@ -36,19 +35,21 @@ def _qsgd_ef_kernel(g_ref, e_ref, u_ref, inv_norm_ref, code_ref, enew_ref,
     enew_ref[...] = a - deq
 
 
-def qsgd_ef_2d(g2, e2, u2, inv_norm, *, levels: int, decay: float = 1.0,
-               interpret: bool = False):
+def qsgd_ef_2d(g2, e2, u2, inv_norm, levels, decay, *, interpret: bool = False):
+    """``levels`` and ``decay`` are (1,1) f32 traced scalars — the kernel no
+    longer specializes on them, so knob-varied cells share one program."""
     rows = g2.shape[0]
     grid = (rows // BLOCK_ROWS,)
     blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    scalar = lambda: pl.BlockSpec((1, 1), lambda i: (0, 0))
     return pl.pallas_call(
-        functools.partial(_qsgd_ef_kernel, levels=levels, decay=decay),
+        _qsgd_ef_kernel,
         out_shape=(
             jax.ShapeDtypeStruct(g2.shape, jnp.int8),
             jax.ShapeDtypeStruct(g2.shape, f32),
         ),
         grid=grid,
-        in_specs=[blk(), blk(), blk(), pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        in_specs=[blk(), blk(), blk(), scalar(), scalar(), scalar()],
         out_specs=(blk(), blk()),
         interpret=interpret,
-    )(g2, e2, u2, inv_norm)
+    )(g2, e2, u2, inv_norm, levels, decay)

@@ -8,7 +8,9 @@
 
 On CPU development hosts pass --fake-devices N to simulate the mesh.
 Comm presets come from repro.launch.dryrun.COMM_PRESETS; any preset can be
-further tweaked with --local-steps / --bucket-mb / --pod-local.
+further tweaked with --local-steps / --bucket-mb / --pod-local /
+--overlap pipelined [--overlap-staleness 0|1] (§VII microbatch-pipelined
+bucketized aggregation).
 """
 
 import argparse
@@ -35,6 +37,10 @@ def main(argv=None) -> int:
     p.add_argument("--pod-local", action="store_true")
     p.add_argument("--local-steps", type=int, default=0)
     p.add_argument("--bucket-mb", type=float, default=-1.0)
+    p.add_argument("--overlap", default="", choices=("", "sequential", "pipelined"),
+                   help="§VII schedule: pipelined issues each microbatch's "
+                        "bucket all-reduces inside the accumulation scan")
+    p.add_argument("--overlap-staleness", type=int, default=1, choices=(0, 1))
     p.add_argument("--clip-norm", type=float, default=0.0)
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=0)
@@ -72,6 +78,9 @@ def main(argv=None) -> int:
         upd["local_steps"] = args.local_steps
     if args.bucket_mb >= 0:
         upd["bucket_mb"] = args.bucket_mb
+    if args.overlap:
+        upd["overlap"] = args.overlap
+        upd["overlap_staleness"] = args.overlap_staleness
     if upd:
         comm = comm.with_updates(**upd)
 

@@ -346,6 +346,11 @@ def _compile_bundle(
         if opt_state_specs is None:  # momentum with other coefficient
             opt_state_specs = {"v": param_specs}
     comm_state_specs: dict[str, Any] = {"step": P()}
+    # pipelined overlap, staleness 1: the last microbatch's bucket grads are
+    # double-buffered across the step boundary (aggregated by the NEXT step)
+    pipe_carry = spec.overlap == "pipelined" and spec.overlap_staleness == 1
+    if pipe_carry:
+        comm_state_specs["overlap_pending"] = [P(all_axes) for _ in bplan.buckets]
     if aggregate.plan_uses_powersgd(bplan):
         comm_state_specs["psgd_q"] = [P(all_axes) for _ in bplan.buckets]
     if comm.error_feedback:
@@ -371,6 +376,10 @@ def _compile_bundle(
             opt.init(params),
         )
         cstate: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        if pipe_carry:
+            cstate["overlap_pending"] = [
+                comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets
+            ]
         if aggregate.plan_uses_powersgd(bplan):
             base = aggregate.init_comm_state(comm, bplan)["psgd_q"]
             cstate["psgd_q"] = [comms.varying(q, all_axes) for q in base]
@@ -407,15 +416,17 @@ def _compile_bundle(
 
             return jax.value_and_grad(loss_fn, has_aux=True)(params)
 
-        def _step(state, batch, lr, knobs):
-            params = state["params"]
+        def _microbatches(batch, n):
+            return jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch
+            )
+
+        def _sequential_grads(params, batch):
+            """Post-hoc schedule (§VII "sequential"): accumulate every
+            microbatch's raw gradient, aggregate once after the full
+            backward — activation memory scales with B_local/microbatch."""
             if microbatch > 1:
-                # gradient accumulation: fwd+bwd one microbatch at a time —
-                # activation memory scales with B_local/microbatch
-                mb = jax.tree.map(
-                    lambda x: x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:]),
-                    batch,
-                )
+                mb = _microbatches(batch, microbatch)
 
                 def body(acc, b):
                     (l, m), g = _grads(params, b)
@@ -430,13 +441,95 @@ def _compile_bundle(
                 metrics = jax.tree.map(jnp.mean, ms)
             else:
                 (loss, metrics), grads = _grads(params, batch)
-            grads = _fix_model_grads(grads, param_specs, ax.model)
-            cstate = state["comm"]
-            if do_aggregate:
-                key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
-                grads, cstate = aggregate.aggregate_gradients(
-                    comm, bplan, grads, cstate, key, agg_axes, knobs=knobs
+            return _fix_model_grads(grads, param_specs, ax.model), loss, metrics
+
+        def _pipelined_grads(state, batch, knobs):
+            """Microbatch-pipelined bucketized aggregation (§VII overlap):
+            inside the accumulation scan, iteration k issues the (compressed)
+            all-reduce of the PREVIOUS microbatch's bucket grads — no data
+            dependency on this iteration's forward/backward, so XLA's
+            latency-hiding scheduler can overlap the collectives with
+            compute.  Message granularity is the BucketPlan's.  With
+            staleness 1 the last microbatch's buckets are double-buffered in
+            ``comm["overlap_pending"]`` and aggregated by the NEXT step
+            (every collective fully overlappable, the stale contribution
+            scaled by the traced ``stale_scale`` knob); with staleness 0 the
+            pipeline is primed with microbatch 0 and the last aggregation is
+            flushed after the scan (no staleness, one exposed collective)."""
+            params = state["params"]
+            cstate = dict(state["comm"])
+            key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
+            M = microbatch
+            mb = _microbatches(batch, M)
+
+            def mb_grads(b):
+                (l, m), g = _grads(params, b)
+                g = _fix_model_grads(g, param_specs, ax.model)
+                leaves, _ = jax.tree.flatten(g)
+                return aggregate._gather_buckets(bplan, leaves), (l, m)
+
+            acc0 = [jnp.zeros((b.size,), f32) for b in bplan.buckets]
+
+            def body(carry, xs):
+                acc, pending, cst = carry
+                b, k, scale = xs
+                agg, cst = aggregate.aggregate_buckets(
+                    comm, bplan, pending, cst, jax.random.fold_in(key, k),
+                    agg_axes, knobs=knobs,
                 )
+                pending, (l, m) = mb_grads(b)
+                acc = [a + scale * g for a, g in zip(acc, agg)]
+                return (acc, pending, cst), (l, m)
+
+            if spec.overlap_staleness == 1:
+                pending0 = list(cstate.pop("overlap_pending"))
+                scales = jnp.ones((M,), f32).at[0].set(knobs["stale_scale"])
+                with comms.loop(M):  # collective accounting
+                    (acc, pending, cst), (ls, ms) = jax.lax.scan(
+                        body, (acc0, pending0, cstate),
+                        (mb, jnp.arange(M), scales),
+                    )
+                cstate = dict(cst)
+                cstate["overlap_pending"] = pending
+                loss = jnp.mean(ls)
+                metrics = jax.tree.map(jnp.mean, ms)
+            else:
+                pending, (l0, m0) = mb_grads(jax.tree.map(lambda x: x[0], mb))
+                if M > 1:
+                    with comms.loop(M - 1):
+                        (acc, pending, cstate), (ls, ms) = jax.lax.scan(
+                            body, (acc0, pending, cstate),
+                            (jax.tree.map(lambda x: x[1:], mb),
+                             jnp.arange(M - 1), jnp.ones((M - 1,), f32)),
+                        )
+                    loss = (l0 + jnp.sum(ls)) / M
+                    metrics = jax.tree.map(
+                        lambda a, bs: (a + jnp.sum(bs, axis=0)) / M, m0, ms)
+                else:
+                    acc, loss, metrics = acc0, l0, m0
+                agg, cstate = aggregate.aggregate_buckets(
+                    comm, bplan, pending, cstate, jax.random.fold_in(key, M - 1),
+                    agg_axes, knobs=knobs,
+                )
+                acc = [a + g for a, g in zip(acc, agg)]
+                cstate = dict(cstate)
+            leaves, treedef = jax.tree.flatten(params)
+            new_leaves = aggregate._scatter_buckets(
+                bplan, [a / M for a in acc], leaves)
+            return jax.tree.unflatten(treedef, new_leaves), cstate, loss, metrics
+
+        def _step(state, batch, lr, knobs):
+            params = state["params"]
+            if do_aggregate and spec.overlap == "pipelined":
+                grads, cstate, loss, metrics = _pipelined_grads(state, batch, knobs)
+            else:
+                grads, loss, metrics = _sequential_grads(params, batch)
+                cstate = state["comm"]
+                if do_aggregate:
+                    key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
+                    grads, cstate = aggregate.aggregate_gradients(
+                        comm, bplan, grads, cstate, key, agg_axes, knobs=knobs
+                    )
             if clip_norm:
                 grads = global_clip(grads, knobs["clip_norm"])
             new_params, opt_state = opt.update(grads, state["opt"], params, lr)

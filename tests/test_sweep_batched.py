@@ -65,14 +65,43 @@ def test_value_knobs_stay_out_of_the_shape_key():
     assert training_shape_key(base.replace(objective="logistic")) != training_shape_key(base)
 
 
-def test_kernel_compressor_knobs_are_structural():
-    """Pallas kernels specialize on their constants: qsgd_kernel levels is
-    part of the fingerprint (unlike the traced jnp qsgd levels)."""
-    a = shape_fingerprint(get_compressor("qsgd_kernel", levels=4))
-    b = shape_fingerprint(get_compressor("qsgd_kernel", levels=16))
-    assert a != b
+def test_qsgd_kernel_levels_traced_like_jnp_qsgd():
+    """The Pallas qsgd kernel takes ``levels`` as a traced (1,1) scalar
+    block (mask-style), not a specialization constant: knob-varied cells
+    share the fingerprint at both layers, like the jnp ``qsgd``."""
+    from repro.core.compression.base import runtime_fingerprint
+
+    assert shape_fingerprint(get_compressor("qsgd_kernel", levels=4)) == \
+        shape_fingerprint(get_compressor("qsgd_kernel", levels=16))
+    assert runtime_fingerprint(get_compressor("qsgd_kernel", levels=4)) == \
+        runtime_fingerprint(get_compressor("qsgd_kernel", levels=16))
     assert shape_fingerprint(get_compressor("qsgd", levels=4)) == \
         shape_fingerprint(get_compressor("qsgd", levels=16))
+    with pytest.raises(ValueError, match="int8"):
+        batch_param_values(get_compressor("qsgd_kernel", levels=200), 64)
+
+
+def test_qsgd_kernel_cells_share_one_engine_compile():
+    """ROADMAP follow-up: qsgd_kernel cells stop compiling per level — one
+    class program serves every levels value, with per-cell results matching
+    solo runs (and levels genuinely biting)."""
+    problem = quadratic_problem(n_workers=4, seed=0)
+    cfgs = [SimCfg(n_workers=4, sync="bsp", steps=8, lr=0.05, seed=2,
+                   compressor=get_compressor("qsgd_kernel", levels=lv),
+                   error_feedback=True)
+            for lv in (2, 16)]
+    assert shape_class_key(cfgs[0]) == shape_class_key(cfgs[1])
+    engine_cache_clear()
+    outs = simulate_training_classbatch(cfgs, problem)
+    assert engine_cache_stats().compiles == 1
+    for cfg, out in zip(cfgs, outs):
+        single = simulate_training_batch(cfg, problem)[0]
+        np.testing.assert_allclose(out[0]["loss"], single["loss"],
+                                   rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(out[0]["bits"], single["bits"], rtol=1e-6)
+    # coarser quantization transmits fewer bits and converges differently
+    assert outs[0][0]["bits"][-1] < outs[1][0]["bits"][-1]
+    assert np.abs(outs[0][0]["loss"] - outs[1][0]["loss"]).max() > 1e-6
 
 
 # ---------------------------------------------------------------------------
