@@ -21,6 +21,7 @@ MODULES = (
     ("sweep_batched", "benchmarks.sweep"),
     ("sec7_schedule", "benchmarks.schedule_table"),
     ("sec7_overlap", "benchmarks.overlap_bench"),
+    ("elastic", "benchmarks.churn_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("train_micro", "benchmarks.train_micro"),
 )

@@ -183,20 +183,27 @@ def _aggregate_one(
     a: jax.Array,
     axes: tuple[str, ...],
     p: dict | None = None,
+    alive: jax.Array | None = None,
+    n_eff: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (aggregated mean, self decompressed C(a) for the EF update).
     ``p`` carries the bucket's *traced* runtime knob values (qsgd levels,
-    terngrad clip, ...) so shape-class cells share one compiled program."""
+    terngrad clip, ...) so shape-class cells share one compiled program.
+    ``alive``/``n_eff`` (churn): this shard's traced participation bit and
+    the live-worker count — masked shards contribute zero and the mean
+    renormalizes over the live set."""
     n_workers = 1
     for axn in axes:
         n_workers *= compat_axis_size(axn)
+    denom = n_workers if n_eff is None else n_eff
 
     if compressor is None:
+        a_m = a if alive is None else a * alive
         if comm.agg_dtype == "bfloat16":
-            a16 = a.astype(jnp.bfloat16)
-            agg = collectives.allreduce(a16, axes, impl=comm.collective).astype(f32) / n_workers
+            a16 = a_m.astype(jnp.bfloat16)
+            agg = collectives.allreduce(a16, axes, impl=comm.collective).astype(f32) / denom
         else:
-            agg = collectives.allreduce(a, axes, impl=comm.collective) / n_workers
+            agg = collectives.allreduce(a_m, axes, impl=comm.collective) / denom
         return agg, a
 
     c = compress_p(compressor, key, a, p)
@@ -205,23 +212,35 @@ def _aggregate_one(
 
     if mode == "majority":
         # int8 vote sum is exact for <=127 workers (our axes are <=32) and
-        # keeps the wire at 1 byte/element (4x; bit-packed variant is 32x)
-        votes = comms.psum(c.payload["sign"], axes)
+        # keeps the wire at 1 byte/element (4x; bit-packed variant is 32x);
+        # masked-out shards cast zero votes (ties resolve to +1 as before)
+        sign = c.payload["sign"]
+        if alive is not None:
+            sign = sign * alive.astype(sign.dtype)
+        votes = comms.psum(sign, axes)
         agg = jnp.where(votes >= 0, 1.0, -1.0).astype(f32)
     elif mode == "sum":
-        agg = comms.psum(c.payload["dense"], axes) / n_workers
+        dense = c.payload["dense"] if alive is None else c.payload["dense"] * alive
+        agg = comms.psum(dense, axes) / denom
     else:  # gather + decompress
         gathered = {k: comms.all_gather(v, axes, axis=0) for k, v in c.payload.items()}
+        alive_g = None
+        if alive is not None:
+            alive_g = comms.all_gather(alive.reshape(1), axes, axis=0).reshape(-1)
         if "indices" in gathered:  # sparse (values, indices): one scatter-add
-            vals = gathered["values"].reshape(-1)
+            vals2d = gathered["values"].reshape(n_workers, -1)
+            if alive_g is not None:
+                vals2d = vals2d * alive_g[:, None]
+            vals = vals2d.reshape(-1)
             idx = gathered["indices"].reshape(-1)
-            agg = jnp.zeros((c.n,), f32).at[idx].add(vals) / n_workers
+            agg = jnp.zeros((c.n,), f32).at[idx].add(vals) / denom
         else:
             def body(w, acc):
                 pw = {k: jax.lax.dynamic_index_in_dim(v, w, 0, keepdims=False) for k, v in gathered.items()}
-                return acc + decompress_p(compressor, Compressed(pw, c.n), p)
+                dec = decompress_p(compressor, Compressed(pw, c.n), p)
+                return acc + (dec if alive_g is None else alive_g[w] * dec)
 
-            agg = jax.lax.fori_loop(0, n_workers, body, jnp.zeros((c.n,), f32)) / n_workers
+            agg = jax.lax.fori_loop(0, n_workers, body, jnp.zeros((c.n,), f32)) / denom
 
     if getattr(compressor, "re_sparsify", False):  # gTop-k [191]
         kk = compressor.k or max(1, int(c.n * compressor.ratio))
@@ -256,6 +275,27 @@ def aggregate_buckets(
         widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
     key = jax.random.fold_in(key, widx)
 
+    # churn: each shard draws its own participation bit for this round from
+    # the per-worker key (probability/window traced via knobs); the live
+    # count is one scalar psum — a real liveness round on the wire.  One
+    # mask covers every bucket of the round.
+    alive = n_eff = None
+    if getattr(comm, "churn", False) or getattr(comm, "dropout_rate", 0.0) > 0:
+        if plan_uses_powersgd(plan):
+            raise ValueError("powersgd is unsupported under churn")
+        if knobs is not None:
+            drop, cs, ce = knobs["dropout"], knobs["churn_start"], knobs["churn_end"]
+        else:
+            drop = jnp.asarray(comm.dropout_rate, f32)
+            cs = jnp.asarray(float(comm.churn_start), f32)
+            ce = jnp.asarray(float(comm.churn_end) if comm.churn_end >= 0
+                             else float("inf"), f32)
+        u = jax.random.uniform(jax.random.fold_in(key, 0x6368), ())
+        stepf = comm_state["step"].astype(f32)
+        in_window = (stepf >= cs) & (stepf < ce)
+        alive = jnp.where(in_window & (u < drop), 0.0, 1.0)
+        n_eff = jnp.maximum(comms.psum(alive, axes), 1.0)
+
     state = dict(comm_state)
     if "ef" in state:
         state["ef"] = list(state["ef"])
@@ -269,7 +309,8 @@ def aggregate_buckets(
     with comms.tag("grad_agg"):
         for i, (b, g) in enumerate(zip(plan.buckets, bufs)):
             compressor = plan.compressor(b)
-            a = feedback.pre_compress(comm, g, state, i, n_workers, knobs=knobs)
+            a = feedback.pre_compress(comm, g, state, i, n_workers,
+                                      knobs=knobs, alive=alive)
             if getattr(compressor, "reduce_mode", "") == "powersgd":
                 agg, q_new = _powersgd_aggregate(
                     compressor, a, state["psgd_q"][i], axes, n_workers
@@ -280,9 +321,10 @@ def aggregate_buckets(
                 agg, self_hat = _aggregate_one(
                     comm, compressor, jax.random.fold_in(key, i), a, axes,
                     knobs["comp"][i] if knobs is not None else None,
+                    alive=alive, n_eff=n_eff,
                 )
             if compressor is not None:
-                feedback.post_compress(comm, a, self_hat, state, i)
+                feedback.post_compress(comm, a, self_hat, state, i, alive=alive)
             out_bufs.append(agg)
     state["step"] = state["step"] + 1
     return out_bufs, state

@@ -8,6 +8,7 @@ from repro.core.compression.base import (  # noqa: F401
 )
 from repro.core.compression import (  # noqa: F401
     kernels_backed,
+    policy,
     powersgd,
     quantization,
     sparsification,

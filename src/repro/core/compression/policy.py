@@ -1,0 +1,161 @@
+"""Adaptive compression policies (paper §X future directions / Hivemind-style
+size routing).
+
+Unlike the fixed-rate methods of §V/§VI, a *policy* compressor picks its
+operating point per tensor or per round:
+
+* :class:`SizeAdaptive` — route by tensor size (the Hivemind heuristic):
+  tensors at or above a byte/element threshold get stochastic 8-bit uniform
+  quantization, small tensors ship as fp16 (quantizing them saves little and
+  hurts precision-sensitive scalars like norms/biases).
+* :class:`AdaptiveQSGD` — variance feedback: choose the QSGD level count
+  each round from the realized dispersion of the vector so the relative
+  quantization variance tracks a target, instead of a fixed ``levels``.
+
+Both keep the static-vs-traced discipline: the routing *threshold* and the
+variance *target* are value knobs (``BATCH_KNOBS``) in the sweep engine, so a
+policy sweep shares one compiled program; at the runtime layer the threshold
+is structural (it picks the payload format) while ``var_target`` stays
+traced (the int8 code payload is shape-invariant in it).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressed, register
+
+f32 = jnp.float32
+
+
+def _to_half_sat(x):
+    """fp16 cast with saturation (no inf on overflow — the wire convention
+    of mixed-precision allreduce implementations)."""
+    return jnp.clip(x, -65504.0, 65504.0).astype(jnp.float16)
+
+
+def _q8_stochastic(key, x):
+    """Symmetric stochastic 8-bit quantization: unbiased rounding of
+    x/scale*127 to the int8 grid (conditioned on the data-derived scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    y = x / scale * 127.0
+    l = jnp.floor(y)
+    l = l + (jax.random.uniform(key, x.shape) < y - l)
+    return l, scale  # l in [-127, 127]
+
+
+@register("size_adaptive")
+@dataclass
+class SizeAdaptive:
+    """Hivemind-style size routing: >= ``threshold`` elements -> stochastic
+    8-bit uniform quantization; below -> fp16 cast.
+
+    The branch is a *static* function of ``x.size`` at the runtime layer
+    (the payload format differs), but the engine traces the threshold
+    (``BATCH_KNOBS``) by computing both reconstructions and selecting — a
+    threshold sweep shares one compiled program."""
+
+    threshold: int = 65536  # elements (Hivemind routes at 2**16)
+    unbiased: bool = False  # the fp16 branch rounds deterministically
+    reduce_mode: str = "none"
+    BATCH_KNOBS = ("threshold",)
+    # the threshold picks the payload FORMAT -> structural at runtime
+    RUNTIME_KNOBS = ()
+
+    def compress(self, key, x) -> Compressed:
+        if x.size >= self.threshold:
+            l, scale = _q8_stochastic(key, x)
+            return Compressed({"q8": l.astype(jnp.int8), "scale": scale[None]}, x.size)
+        return Compressed({"half": _to_half_sat(x)}, x.size)
+
+    def decompress(self, c) -> jax.Array:
+        if "q8" in c.payload:
+            return c.payload["q8"].astype(f32) / 127.0 * c.payload["scale"][0]
+        return c.payload["half"].astype(f32)
+
+    def roundtrip_p(self, key, x, p):
+        thr = p.get("threshold", 1.0 * self.threshold)
+        l, scale = _q8_stochastic(key, x)
+        q8 = l / 127.0 * scale
+        half = _to_half_sat(x).astype(f32)
+        big = jnp.asarray(x.size, f32) >= thr
+        out = jnp.where(big, q8, half)
+        bits = jnp.where(big, x.size * 8.0 + 32, x.size * 16.0)
+        return out, bits
+
+    def wire_bits(self, n) -> float:
+        return n * 8.0 + 32 if n >= self.threshold else n * 16.0
+
+
+@register("adaptive_qsgd")
+@dataclass
+class AdaptiveQSGD:
+    """QSGD with variance feedback: the realized relative quantization
+    variance of s-level dithering is ~ ||x||_1 / (s ||x||_2)  (the data-
+    dependent term of QSGD's variance bound), so each round picks
+
+        s = clip(||x||_1 / (||x||_2 * var_target), 1, 127)
+
+    — dispersed vectors (churn-inflated EF residuals, dense gradients) get
+    more levels, spiky ones fewer, at the same int8 wire format.  ``s`` is a
+    traced *float* (the dithering is unbiased for any s > 0) and rides in
+    the payload like qsgd's, so ``var_target`` is a value knob at BOTH
+    layers (``BATCH_KNOBS`` and ``RUNTIME_KNOBS``)."""
+
+    var_target: float = 1.0  # target relative quantization variance
+    unbiased: bool = True
+    reduce_mode: str = "none"
+    BATCH_KNOBS = ("var_target",)
+    RUNTIME_KNOBS = ("var_target",)
+
+    def batch_params(self, dim: int) -> dict:
+        if self.var_target <= 0:
+            raise ValueError(f"var_target must be > 0, got {self.var_target!r}")
+        return {"var_target": self.var_target}
+
+    def runtime_params(self) -> dict:
+        if self.var_target <= 0:
+            raise ValueError(f"var_target must be > 0, got {self.var_target!r}")
+        return {"var_target": self.var_target}
+
+    def _levels(self, x, vt):
+        # max-scaled norms: ||x||^2 overflows f32 past ~1e19 per coordinate
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+        xs = x / amax
+        norm = jnp.maximum(jnp.linalg.norm(xs) * amax, 1e-30)
+        s = jnp.clip(jnp.sum(jnp.abs(xs)) / jnp.maximum(jnp.linalg.norm(xs), 1e-30) / vt,
+                     1.0, 127.0)
+        return s, norm
+
+    def compress_p(self, key, x, p) -> Compressed:
+        vt = jnp.asarray(p.get("var_target", self.var_target), f32)
+        s, norm = self._levels(x, vt)
+        y = jnp.abs(x) / norm * s
+        l = jnp.floor(y)
+        l = l + (jax.random.uniform(key, x.shape) < y - l)
+        code = (jnp.sign(x) * l).astype(jnp.int8)  # |l| <= ceil(y) <= s <= 127
+        return Compressed({"code": code, "norm": norm[None], "s": s[None]}, x.size)
+
+    def decompress_p(self, c, p) -> jax.Array:
+        return c.payload["code"].astype(f32) / c.payload["s"][0] * c.payload["norm"][0]
+
+    def roundtrip_p(self, key, x, p):
+        vt = p.get("var_target", self.var_target)
+        s, norm = self._levels(x, vt)
+        y = jnp.abs(x) / norm * s
+        l = jnp.floor(y)
+        l = l + (jax.random.uniform(key, x.shape) < y - l)
+        # int8 code + norm + s: the wire format is s-independent
+        return jnp.sign(x) * l / s * norm, jnp.asarray(x.size * 8.0 + 64, f32)
+
+    def compress(self, key, x) -> Compressed:
+        return self.compress_p(key, x, {})
+
+    def decompress(self, c) -> jax.Array:
+        return self.decompress_p(c, {})
+
+    def wire_bits(self, n) -> float:
+        return n * 8.0 + 64

@@ -61,6 +61,7 @@ def pre_compress(
     idx: int,
     n_workers: int,
     knobs: dict[str, Any] | None = None,
+    alive: jax.Array | None = None,
 ) -> jax.Array:
     """Momentum correction + EF accumulation + local clipping (order per
     DGC [25]): returns the vector handed to the compressor.
@@ -68,11 +69,13 @@ def pre_compress(
     The on/off *flags* come from ``comm`` (structural — they decide which
     state buffers exist); the coefficients come from the traced ``knobs``
     tree when given, so cells differing only in momentum / clip / EF-decay
-    values share one compiled program."""
+    values share one compiled program.  ``alive`` (churn participation bit):
+    a masked-out shard neither sends nor accumulates — its momentum buffer
+    freezes here and its EF residual freezes in :func:`post_compress`."""
     if comm.momentum_correction:
         m = knobs["momentum"] if knobs is not None else comm.momentum_correction
         u = m * state["u"][idx] + g
-        state["u"][idx] = u
+        state["u"][idx] = u if alive is None else jnp.where(alive > 0, u, state["u"][idx])
         g = u
     if comm.local_clip:
         thr = knobs["local_clip"] if knobs is not None else comm.local_clip
@@ -89,7 +92,13 @@ def post_compress(
     g_hat: jax.Array,
     state: dict[str, Any],
     idx: int,
+    alive: jax.Array | None = None,
 ) -> None:
-    """Error accumulation update e = a - C(a) (§IX-A, eq. block)."""
+    """Error accumulation update e = a - C(a) (§IX-A, eq. block).  A
+    masked-out shard (``alive == 0``) sent nothing, so its residual stays
+    frozen until it rejoins."""
     if comm.error_feedback:
-        state["ef"][idx] = g_in - g_hat
+        new = g_in - g_hat
+        if alive is not None:
+            new = jnp.where(alive > 0, new, state["ef"][idx])
+        state["ef"][idx] = new

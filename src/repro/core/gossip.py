@@ -49,6 +49,23 @@ def ring_mixing_matrix_traced(n: int, w) -> jax.Array:
     return eye * (1 - 2 * w) + w * ring
 
 
+def masked_mixing_matrix(W: jax.Array, m: jax.Array) -> jax.Array:
+    """Renormalize a mixing matrix over the live peer set ``m`` (1 = alive,
+    0 = dropped; both entries may be traced).
+
+    A dead peer's column weight folds back into each live row's SELF weight
+    (instead of dividing the row), so row sums are preserved EXACTLY and an
+    all-ones mask reproduces ``W`` bitwise; dead rows become identity (their
+    parameters freeze until rejoin).  For symmetric ``W`` the result stays
+    symmetric — mass is conserved among the live workers."""
+    n = W.shape[0]
+    eye = jnp.eye(n, dtype=W.dtype)
+    off = W * (1.0 - eye)
+    dead_w = jnp.sum(off * (1.0 - m[None, :]), axis=1)  # weight lost per row
+    Wm = off * m[None, :] + jnp.diag(jnp.diag(W) + dead_w)
+    return m[:, None] * Wm + (1.0 - m[:, None]) * eye
+
+
 def exp_mixing_matrix(n: int) -> np.ndarray:
     """One-peer exponential graph (powers of two), averaged over rounds."""
     import math
@@ -81,11 +98,31 @@ def _neighbor_sum(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
     return comms.ppermute(x, axis, right) + comms.ppermute(x, axis, left)
 
 
-def dpsgd_mix(params_flat: list[jax.Array], axes: tuple[str, ...], w=1.0 / 3.0):
+def dpsgd_mix(params_flat: list[jax.Array], axes: tuple[str, ...], w=1.0 / 3.0,
+              alive: jax.Array | None = None):
     """D-PSGD [51]: x_i <- (1-2w) x_i + w (x_left + x_right).  ``w`` may be a
     *traced* scalar (the ``gossip_w`` knob) — the wire cost is w-independent,
-    so every mixing weight shares one compiled program."""
-    return [(1 - 2 * w) * p + w * _neighbor_sum(p, axes) for p in params_flat]
+    so every mixing weight shares one compiled program.
+
+    ``alive`` (churn participation bit, traced scalar per shard): a dead
+    peer's weight folds back into the live shard's self weight — each row of
+    the effective mixing matrix keeps summing to 1 — and a dead shard keeps
+    its own parameters untouched (frozen until rejoin)."""
+    if alive is None:
+        return [(1 - 2 * w) * p + w * _neighbor_sum(p, axes) for p in params_flat]
+    axis = axes[-1]
+    n = compat_axis_size(axis)
+    right = [(j, (j + 1) % n) for j in range(n)]
+    left = [(j, (j - 1) % n) for j in range(n)]
+    live_nbrs = (comms.ppermute(alive, axis, right)
+                 + comms.ppermute(alive, axis, left))
+    out = []
+    for p in params_flat:
+        ap = alive * p
+        nbr = comms.ppermute(ap, axis, right) + comms.ppermute(ap, axis, left)
+        mixed = (1 - w * live_nbrs) * p + w * nbr
+        out.append(jnp.where(alive > 0, mixed, p))
+    return out
 
 
 @dataclass

@@ -65,6 +65,10 @@ class TimelineCfg:
     local_steps: int = 8  # Local SGD H
     arch: str = "ps"  # ps | allreduce | gossip
     seed: int = 0
+    # heterogeneity (churn axis): per-worker speed multipliers (1.0 =
+    # nominal; empty = homogeneous) and the straggler draw family
+    worker_speeds: tuple = ()
+    straggler_dist: str = "lognormal"  # lognormal | uniform | none
 
 
 @dataclass
@@ -112,8 +116,22 @@ def _comm_bytes(cfg: TimelineCfg) -> float:
 def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
     rng = np.random.default_rng(cfg.seed)
     n, T = cfg.n_workers, cfg.iters
-    compute = rng.lognormal(np.log(cfg.compute_mean), cfg.straggler_sigma, (n, T))
+    if cfg.straggler_dist == "lognormal":
+        compute = rng.lognormal(np.log(cfg.compute_mean), cfg.straggler_sigma, (n, T))
+    elif cfg.straggler_dist == "uniform":
+        # same sigma knob reinterpreted as the half-width fraction
+        lo = cfg.compute_mean * max(1e-6, 1.0 - cfg.straggler_sigma)
+        hi = cfg.compute_mean * (1.0 + cfg.straggler_sigma)
+        compute = rng.uniform(lo, hi, (n, T))
+    elif cfg.straggler_dist == "none":
+        compute = np.full((n, T), cfg.compute_mean)
+    else:
+        raise ValueError(cfg.straggler_dist)
     compute[0] *= cfg.straggler_worker_slowdown
+    if cfg.worker_speeds:
+        if len(cfg.worker_speeds) != n:
+            raise ValueError("worker_speeds length must equal n_workers")
+        compute /= np.asarray(cfg.worker_speeds, dtype=float)[:, None]
     finish = np.zeros((n, T))
     t = np.zeros(n)  # current wall-clock per worker
     done = np.zeros(n, dtype=int)  # iterations completed
@@ -207,6 +225,14 @@ class SimCfg:
     steps: int = 300
     seed: int = 0
     gossip_w: float = 1.0 / 3.0
+    # churn (elastic-worker) axis: a per-step participation mask drawn
+    # inside the scan. `churn` is STRUCTURAL (the masked program differs);
+    # the probabilities / window are traced values.
+    churn: bool = False
+    dropout_rate: float = 0.0  # shared per-step P(worker offline)
+    worker_dropout: tuple = ()  # per-worker override (length n_workers)
+    churn_start: int = 0  # first step (inclusive) dropout applies
+    churn_end: int = -1  # last step (exclusive); -1 = until the end
 
 
 class Problem(tuple):
@@ -333,6 +359,7 @@ class EngineSpec:
     comp_key: tuple  # compressor shape fingerprint (("dense",) for None)
     delay_slots: int = 1  # delay-line depth >= max staleness + 1 in the class
     traced_noise: bool = False  # grad noise passed as a traced CellParams value
+    churn: bool = False  # participation mask carried through the scan
 
 
 @dataclass
@@ -347,6 +374,11 @@ class CellParams:
     gossip_w: float = 1.0 / 3.0
     grad_noise: float | None = None
     comp: dict[str, float] = field(default_factory=dict)
+    # churn values (traced; present only when the spec carries the mask):
+    # per-worker dropout probabilities and the [start, end) step window
+    dropout: tuple | None = None
+    churn_start: float = 0.0
+    churn_end: float = float("inf")
 
     def as_tree(self) -> dict:
         out = {
@@ -358,6 +390,10 @@ class CellParams:
         }
         if self.grad_noise is not None:
             out["grad_noise"] = jnp.asarray(self.grad_noise, f32)
+        if self.dropout is not None:
+            out["dropout"] = jnp.asarray(self.dropout, f32)
+            out["churn_start"] = jnp.asarray(self.churn_start, f32)
+            out["churn_end"] = jnp.asarray(self.churn_end, f32)
         return out
 
 
@@ -383,6 +419,9 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         raise ValueError(
             f"split_cfg needs dim to derive {type(cfg.compressor).__name__} "
             f"knob values ({batch_knobs(cfg.compressor)})")
+    churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout))
+    if cfg.worker_dropout and len(cfg.worker_dropout) != cfg.n_workers:
+        raise ValueError("worker_dropout length must equal n_workers")
     spec = EngineSpec(
         sync=cfg.sync,
         n_workers=cfg.n_workers,
@@ -391,7 +430,11 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         comp_key=shape_fingerprint(cfg.compressor),
         delay_slots=cfg.staleness + 1 if cfg.sync in ("ssp", "asp") else 1,
         traced_noise=grad_noise is not None,
+        churn=churn,
     )
+    dropout = (tuple(float(p) for p in cfg.worker_dropout)
+               if cfg.worker_dropout
+               else (float(cfg.dropout_rate),) * cfg.n_workers)
     params = CellParams(
         lr=cfg.lr,
         local_steps=cfg.local_steps,
@@ -399,6 +442,9 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         gossip_w=cfg.gossip_w,
         grad_noise=grad_noise,
         comp=batch_param_values(cfg.compressor, dim) if dim is not None else {},
+        dropout=dropout if churn else None,
+        churn_start=float(cfg.churn_start),
+        churn_end=float(cfg.churn_end) if cfg.churn_end >= 0 else float("inf"),
     )
     return spec, params
 
@@ -411,7 +457,8 @@ def shape_class_key(cfg: SimCfg) -> tuple:
     from repro.core.compression.base import shape_fingerprint
 
     return (cfg.sync, cfg.n_workers, cfg.steps, bool(cfg.error_feedback),
-            shape_fingerprint(cfg.compressor))
+            shape_fingerprint(cfg.compressor),
+            bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout)))
 
 
 def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
@@ -442,7 +489,7 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
         loss_fn_ = (lambda x: loss_fn(x, data=data)) if has_data else loss_fn
         x_star = data["x_star"] if has_data else x_star0
         if sync == "gossip":
-            from repro.core.gossip import ring_mixing_matrix_traced
+            from repro.core.gossip import masked_mixing_matrix, ring_mixing_matrix_traced
 
             W = ring_mixing_matrix_traced(n, p["gossip_w"])
         # SSP: workers alternate being ahead — worker i's gradient is delayed
@@ -459,29 +506,49 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
 
         def apply_compression(ckeys, G, ef):
             """Compress every worker's (effective) gradient; returns the
-            reconstruction, the new EF residual, and the bits ALL workers
-            put on the wire this round."""
+            reconstruction, the new EF residual, and the PER-WORKER wire-bit
+            vector of this round (callers sum it, masked under churn)."""
             if comp is None:
-                return G, ef, jnp.asarray(32.0 * dim * n, f32)
+                return G, ef, jnp.full((n,), 32.0 * dim, f32)
             if spec.error_feedback:
                 out, ef2, wb = jax.vmap(
                     lambda k, g, e: roundtrip_bits_ef(comp, k, g, e, cp)
                 )(ckeys, G, ef)
-                return out, ef2, jnp.sum(wb)
+                return out, ef2, wb
             out, wb = jax.vmap(lambda k, g: roundtrip_bits(comp, k, g, cp))(ckeys, G)
-            return out, ef, jnp.sum(wb)
+            return out, ef, wb
 
         def step(carry, t):
             X, ef, delay_buf, key, total_bits = carry
             key, k1, k2 = jax.random.split(key, 3)
             gkeys = jax.random.split(k1, n)
             ckeys = jax.random.split(k2, n)
+            if spec.churn:
+                # The mask key folds out of the NEW carry key (the split
+                # above is untouched), so the gradient/compressor key
+                # streams match the churn-free program draw for draw and a
+                # dropout-0 churn cell reproduces it bitwise.
+                u = jax.random.uniform(jax.random.fold_in(key, 0x6368), (n,))
+                tf = t.astype(f32)
+                in_window = (tf >= p["churn_start"]) & (tf < p["churn_end"])
+                m = jnp.where(in_window & (u < p["dropout"]), 0.0, 1.0)
+                n_alive = jnp.maximum(jnp.sum(m), 1.0)
             G = grad_all(X, gkeys)
 
             if sync == "gossip":
-                Ghat, ef, round_bits = apply_compression(ckeys, G, ef)
-                X = W @ (X - lr * Ghat)
-                total_bits = total_bits + round_bits
+                Ghat, ef2, wb = apply_compression(ckeys, G, ef)
+                if spec.churn:
+                    # dead rows are identity (frozen params), dead columns'
+                    # weight folds into each live row's self-weight — rows
+                    # still sum to 1 and W stays symmetric
+                    ef = jnp.where(m[:, None] > 0, ef2, ef)
+                    Weff = masked_mixing_matrix(W, m)
+                    X = Weff @ (X - lr * Ghat * m[:, None])
+                    total_bits = total_bits + jnp.sum(wb * m)
+                else:
+                    ef = ef2
+                    X = W @ (X - lr * Ghat)
+                    total_bits = total_bits + jnp.sum(wb)
             else:
                 if sync == "asp":
                     delay_buf = jnp.roll(delay_buf, 1, axis=0).at[0].set(G)
@@ -491,20 +558,41 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                     G_eff = delay_buf[d_idx, widx]
                 else:
                     G_eff = G
-                Ghat, ef, round_bits = apply_compression(ckeys, G_eff, ef)
+                Ghat, ef2, wb = apply_compression(ckeys, G_eff, ef)
+                # EF residuals of masked-out workers freeze: they neither
+                # sent nor accumulated this round
+                ef = jnp.where(m[:, None] > 0, ef2, ef) if spec.churn else ef2
                 if sync == "local":
-                    X = X - lr * Ghat
-                    is_sync = (t + 1) % p["local_steps"] == 0
-                    X = jnp.where(
-                        is_sync,
-                        jnp.broadcast_to(jnp.mean(X, axis=0)[None], X.shape),
-                        X,
-                    )
-                    # Local SGD communicates only at sync steps.
-                    total_bits = total_bits + jnp.where(is_sync, round_bits, 0.0)
+                    if spec.churn:
+                        X = X - lr * Ghat * m[:, None]
+                        is_sync = (t + 1) % p["local_steps"] == 0
+                        xs = jnp.sum(X * m[:, None], axis=0) / n_alive
+                        # only live workers adopt the (live-only) average;
+                        # a dead worker rejoins by mixing back in later
+                        X = jnp.where(is_sync & (m[:, None] > 0),
+                                      jnp.broadcast_to(xs[None], X.shape), X)
+                        total_bits = total_bits + jnp.where(
+                            is_sync, jnp.sum(wb * m), 0.0)
+                    else:
+                        X = X - lr * Ghat
+                        is_sync = (t + 1) % p["local_steps"] == 0
+                        X = jnp.where(
+                            is_sync,
+                            jnp.broadcast_to(jnp.mean(X, axis=0)[None], X.shape),
+                            X,
+                        )
+                        # Local SGD communicates only at sync steps.
+                        total_bits = total_bits + jnp.where(is_sync, jnp.sum(wb), 0.0)
+                elif spec.churn:
+                    # masked mean with denominator renormalized over the
+                    # live set; the global model updates every row (PS
+                    # semantics: a rejoining worker reads current params)
+                    gbar = jnp.sum(Ghat * m[:, None], axis=0) / n_alive
+                    X = X - lr * gbar[None, :]
+                    total_bits = total_bits + jnp.sum(wb * m)
                 else:  # bsp / ssp / asp: exact mean of the effective gradients
                     X = X - lr * jnp.mean(Ghat, axis=0)[None, :]
-                    total_bits = total_bits + round_bits
+                    total_bits = total_bits + jnp.sum(wb)
             xbar = jnp.mean(X, axis=0)
             out = (
                 loss_fn_(xbar),

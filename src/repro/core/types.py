@@ -81,6 +81,16 @@ class CommConfig:
     #: the staleness-1 pipelined update (traced knob; 1.0 = plain average).
     stale_scale: float = 1.0
 
+    # --- churn / elastic workers (survey future directions) --------------------
+    #: carry a per-round participation mask through aggregation/mixing —
+    #: STRUCTURAL (the masked program renormalizes denominators); the
+    #: probability/window values below are traced knobs, so 0/10/30%
+    #: dropout cells share one compiled bundle.
+    churn: bool = False
+    dropout_rate: float = 0.0  # per-round P(worker masked out)
+    churn_start: int = 0  # first step (inclusive) dropout applies
+    churn_end: int = -1  # last step (exclusive); -1 = until the end
+
     def with_updates(self, **kw) -> "CommConfig":
         return dataclasses.replace(self, **kw)
 
@@ -122,6 +132,8 @@ class BundleSpec:
     #: normalized to 0 for sequential cells so the inert knob never splits a
     #: shape class
     overlap_staleness: int = 0
+    #: participation mask carried through aggregation/mixing (values traced)
+    churn: bool = False
 
 
 def bundle_spec(comm: CommConfig) -> BundleSpec:
@@ -145,6 +157,22 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
         raise ValueError(
             "pipelined overlap needs per-step aggregation (sync must be bsp, "
             f"got {comm.sync!r})")
+    churn = bool(comm.churn or comm.dropout_rate > 0)
+    if churn:
+        if not 0.0 <= comm.dropout_rate < 1.0:
+            raise ValueError(f"dropout_rate must be in [0, 1), got {comm.dropout_rate!r}")
+        if comm.sync in ("local", "post_local") or comm.pod_local:
+            # the mask covers gradient aggregation and gossip mixing; the
+            # parameter-average sync round has no per-worker mask semantics
+            raise ValueError("churn is unsupported under parameter-averaging "
+                             "sync (local/post_local/pod_local) — the engine "
+                             "substrate covers local-SGD churn")
+        if comm.gossip_compress == "choco":
+            # the x_hat mirror a peer keeps for a dead neighbor diverges
+            raise ValueError("choco gossip compression is unsupported under churn")
+        if comm.compressor == "powersgd":
+            # factor psums have no per-worker mask semantics
+            raise ValueError("powersgd is unsupported under churn")
     comp = get_compressor(comm.compressor, **comm.compressor_kwargs)
     return BundleSpec(
         sync=comm.sync,
@@ -170,6 +198,7 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
         overlap_staleness=(int(comm.overlap_staleness)
                            if comm.overlap == "pipelined"
                            and comm.aggregator != "gossip" else 0),
+        churn=churn,
     )
 
 
@@ -191,6 +220,9 @@ class CommKnobs:
     gossip_w: float = 1.0 / 3.0
     clip_norm: float = 0.0
     stale_scale: float = 1.0
+    dropout: float = 0.0  # churn: per-round P(worker masked out)
+    churn_start: float = 0.0
+    churn_end: float = float("inf")
     seed: int = 0
     comp: tuple = ()  # per-bucket dict of traced compressor knob values
 
@@ -205,6 +237,10 @@ class CommKnobs:
             gossip_w=comm.gossip_mix_weight,
             clip_norm=clip_norm,
             stale_scale=comm.stale_scale,
+            dropout=comm.dropout_rate,
+            churn_start=float(comm.churn_start),
+            churn_end=(float(comm.churn_end) if comm.churn_end >= 0
+                       else float("inf")),
             seed=seed,
             comp=comp_per_bucket,
         )
@@ -221,6 +257,9 @@ class CommKnobs:
             "gossip_w": jnp.asarray(self.gossip_w, f32),
             "clip_norm": jnp.asarray(self.clip_norm, f32),
             "stale_scale": jnp.asarray(self.stale_scale, f32),
+            "dropout": jnp.asarray(self.dropout, f32),
+            "churn_start": jnp.asarray(self.churn_start, f32),
+            "churn_end": jnp.asarray(self.churn_end, f32),
             "seed": jnp.asarray(self.seed, jnp.int32),
             "comp": [
                 {k: jnp.asarray(v, f32) for k, v in d.items()} for d in self.comp

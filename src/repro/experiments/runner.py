@@ -252,6 +252,8 @@ def to_timeline_cfg(s: Scenario, seed: int | None = None) -> TimelineCfg:
         local_steps=s.local_steps,
         arch=s.arch,
         seed=s.seed if seed is None else seed,
+        worker_speeds=s.worker_speeds,
+        straggler_dist=s.straggler_dist,
     )
 
 
@@ -270,6 +272,11 @@ def to_sim_cfg(s: Scenario, seed: int | None = None) -> SimCfg:
         lr=s.lr,
         steps=s.steps,
         seed=s.seed if seed is None else seed,
+        churn=s.churn,
+        dropout_rate=s.dropout_rate,
+        worker_dropout=s.worker_dropout,
+        churn_start=s.churn_start,
+        churn_end=s.churn_end,
     )
 
 

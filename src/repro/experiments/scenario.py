@@ -90,6 +90,23 @@ class Scenario:
     straggler_sigma: float = 0.2  # lognormal compute-time spread
     straggler_slowdown: float = 1.0  # multiplicative slowdown of worker 0
 
+    # --- churn / heterogeneity (survey future directions: elastic fleets) ----
+    #: Structural flag: a churn cell carries the per-step participation mask
+    #: through the program (different scan body / aggregation graph), so it
+    #: IS a shape-class boundary. The VALUES below stay traced: cells that
+    #: differ only in dropout probabilities share one compile/bundle.
+    churn: bool = False
+    dropout_rate: float = 0.0  # per-step P(worker offline) while in window
+    #: per-worker dropout probabilities (overrides dropout_rate; length must
+    #: equal n_workers). 0.0 = always alive, 1.0 = always dead in-window.
+    worker_dropout: tuple = ()
+    churn_start: int = 0  # first step (inclusive) where dropout applies
+    churn_end: int = -1  # last step (exclusive); -1 = until the end
+    #: per-worker compute-speed multipliers for the timeline substrate
+    #: (length n_workers; 1.0 = nominal). Generalizes straggler_slowdown.
+    worker_speeds: tuple = ()
+    straggler_dist: str = "lognormal"  # lognormal | uniform | none
+
     # --- link / message model ------------------------------------------------
     alpha: float = 1e-3  # per-message latency (s)
     beta: float = 1e-9  # per-byte time (s/B)
@@ -100,6 +117,12 @@ class Scenario:
                            _freeze_kwargs(self.compressor_kwargs))
         if self.compressor in ("none", ""):
             object.__setattr__(self, "compressor", None)
+        object.__setattr__(self, "worker_dropout", tuple(self.worker_dropout))
+        object.__setattr__(self, "worker_speeds", tuple(self.worker_speeds))
+        # churn is implied by any nonzero dropout so sweeps can vary
+        # dropout_rate alone; all implied cells share the churn=True class.
+        if self.dropout_rate > 0 or any(self.worker_dropout):
+            object.__setattr__(self, "churn", True)
 
     # -- convenience ----------------------------------------------------------
 
@@ -137,7 +160,13 @@ class Scenario:
             sched += f"+pipe_s{self.overlap_staleness}"
             if self.microbatch > 1:
                 sched += f"_mb{self.microbatch}"
-        return f"{sync}/{arch}/{comp}/{sched}"
+        cell = f"{sync}/{arch}/{comp}/{sched}"
+        if self.churn:
+            if self.worker_dropout:
+                cell += f"+drop[{','.join(f'{p:g}' for p in self.worker_dropout)}]"
+            else:
+                cell += f"+drop{self.dropout_rate * 100:g}%"
+        return cell
 
     def replace(self, **kw) -> "Scenario":
         return replace(self, **kw)
@@ -185,6 +214,27 @@ class Scenario:
         # boundary is the Local-SGD axis — stale schemes don't compose.
         if self.pod_local and self.sync not in ("bsp", "local"):
             v.append("pod_local forces BSP inside pods (sync must be bsp/local)")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            v.append("dropout_rate must be in [0, 1) (1.0 would kill every worker)")
+        if self.worker_dropout:
+            if len(self.worker_dropout) != self.n_workers:
+                v.append("worker_dropout length must equal n_workers")
+            if any(not 0.0 <= p <= 1.0 for p in self.worker_dropout):
+                v.append("worker_dropout probabilities must be in [0, 1]")
+            if all(p >= 1.0 for p in self.worker_dropout):
+                v.append("worker_dropout must leave at least one worker alive")
+        if self.worker_speeds:
+            if len(self.worker_speeds) != self.n_workers:
+                v.append("worker_speeds length must equal n_workers")
+            if any(s <= 0 for s in self.worker_speeds):
+                v.append("worker_speeds must be positive multipliers")
+        if self.straggler_dist not in ("lognormal", "uniform", "none"):
+            v.append(f"unknown straggler_dist {self.straggler_dist!r}")
+        if self.churn:
+            if self.churn_start < 0:
+                v.append("churn_start must be >= 0")
+            if self.churn_end != -1 and self.churn_end <= self.churn_start:
+                v.append("churn_end must be -1 (open) or > churn_start")
         if self.n_workers < 2:
             v.append("need >= 2 workers for a distributed scenario")
         if substrate is not None:
@@ -199,6 +249,24 @@ class Scenario:
                          "substrate models it via schedule='pipelined')")
             if substrate == "training" and self.arch == "gossip" and self.sync != "bsp":
                 v.append("gossip training is a synchronous mixing round (sync must be bsp)")
+            if self.churn and substrate not in ("training", "trainer"):
+                v.append("the churn mask is executable-only (training/trainer substrates)")
+            if self.churn and substrate == "trainer":
+                if self.sync in ("local", "post_local") or self.pod_local:
+                    v.append("trainer churn masks gradient aggregation / gossip "
+                             "mixing; parameter-averaging sync rounds (local / "
+                             "post_local / pod_local) are engine-only under churn")
+                if self.worker_dropout:
+                    v.append("per-worker dropout vectors are engine-only (the "
+                             "trainer traces one scalar rate per cell)")
+                if self.gossip_compress == "choco":
+                    v.append("choco under churn is unsupported (the x-hat mirror "
+                             "of a dead peer diverges)")
+                if self.compressor == "powersgd":
+                    v.append("powersgd under churn is unsupported (factor psum "
+                             "has no per-worker mask)")
+            if self.worker_speeds and substrate not in (None, "timeline"):
+                v.append("worker_speeds shape the timeline substrate only")
         return v
 
     def is_valid(self, substrate: str | None = None) -> bool:
@@ -219,11 +287,13 @@ def grid(**axes) -> list[Scenario]:
         if name not in _FIELDS:
             raise KeyError(f"unknown Scenario field {name!r}; known: {sorted(_FIELDS)}")
     names = list(axes)
-    # compressor_kwargs is itself tuple/dict-valued: a LIST is an axis of
-    # kwarg sets, anything else (dict, tuple of pairs) is one value.
+    # compressor_kwargs / worker_dropout / worker_speeds are themselves
+    # tuple-valued: a LIST is an axis of values, anything else (dict, tuple)
+    # is ONE value — a bare tuple must not be exploded into an axis.
+    _TUPLE_VALUED = ("compressor_kwargs", "worker_dropout", "worker_speeds")
     value_lists = [
         (list(vs) if isinstance(vs, list) else [vs])
-        if name == "compressor_kwargs"
+        if name in _TUPLE_VALUED
         else (list(vs) if isinstance(vs, (list, tuple)) else [vs])
         for name, vs in axes.items()
     ]

@@ -40,6 +40,10 @@ def to_comm_config(s: Scenario):
         overlap=s.overlap,
         overlap_staleness=s.overlap_staleness,
         stale_scale=s.stale_scale,
+        churn=s.churn,
+        dropout_rate=s.dropout_rate,
+        churn_start=s.churn_start,
+        churn_end=s.churn_end,
     )
 
 

@@ -590,6 +590,22 @@ def _compile_bundle(
             leaves, treedef = jax.tree.flatten(new_params)
             bufs = aggregate._gather_buckets(bplan, leaves)
             cstate = dict(state["comm"])
+            # churn: each shard draws its participation bit for this mixing
+            # round (same key discipline as aggregate_buckets); a dead shard
+            # drops out of the exchange, neighbors renormalize onto self
+            alive = None
+            if spec.churn:
+                widx = jnp.zeros((), jnp.int32)
+                for axn in ax.data:
+                    widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
+                mkey = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"]),
+                    widx)
+                u = jax.random.uniform(jax.random.fold_in(mkey, 0x6368), ())
+                stepf = state["step"].astype(f32)
+                in_window = ((stepf >= knobs["churn_start"])
+                             & (stepf < knobs["churn_end"]))
+                alive = jnp.where(in_window & (u < knobs["dropout"]), 0.0, 1.0)
             with comms.tag("gossip_mix"):
                 if comm.gossip_compress == "choco" and compressor is not None:
                     st = gossip.ChocoState(list(cstate["choco_xhat"]), list(cstate["choco_nbr"]))
@@ -601,7 +617,8 @@ def _compile_bundle(
                     )
                     cstate["choco_xhat"], cstate["choco_nbr"] = st.x_hat, st.x_hat_nbr
                 else:
-                    bufs = gossip.dpsgd_mix(bufs, ax.data, w=knobs["gossip_w"])
+                    bufs = gossip.dpsgd_mix(bufs, ax.data, w=knobs["gossip_w"],
+                                            alive=alive)
             new_leaves = aggregate._scatter_buckets(bplan, bufs, leaves)
             new_params = jax.tree.unflatten(treedef, new_leaves)
             cstate["step"] = cstate["step"] + 1

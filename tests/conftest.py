@@ -8,3 +8,22 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compile_caches():
+    """Compile/build-cache hygiene between test modules: every module starts
+    with ZEROED engine and bundle cache counters, so compile-count and
+    build-count assertions (test_churn, test_sweep_batched, the benchmark
+    smoke tests) measure their OWN cells rather than leftovers from whatever
+    module ran before them.  Lazy imports keep collection cheap; modules that
+    never touch a cache pay one no-op clear."""
+    from repro.core.simulate import engine_cache_clear, engine_cache_stats
+    from repro.train.steps import bundle_cache_clear, bundle_cache_stats
+
+    engine_cache_clear()
+    bundle_cache_clear()
+    e, b = engine_cache_stats(), bundle_cache_stats()
+    assert (e.compiles, e.hits) == (0, 0), f"engine cache not cleared: {e}"
+    assert (b.builds, b.hits) == (0, 0), f"bundle cache not cleared: {b}"
+    yield

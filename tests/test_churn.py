@@ -1,0 +1,261 @@
+"""Chaos lane for the elastic-worker churn axis.
+
+Properties, per ISSUE 6:
+
+* an all-alive mask reproduces the churn-free program — bitwise for the
+  shared-denominator schemes (bsp/ssp/asp), within float tolerance for
+  local/gossip (XLA fuses their masked reductions differently);
+* a single surviving worker degenerates to solo SGD on that worker's
+  objective (hand-rolled reference loop);
+* masked mixing renormalizes over the live set: rows keep summing to 1,
+  dead rows freeze to identity, an all-ones mask is a bitwise no-op;
+* EF residuals of masked-out workers freeze (trainer substrate);
+* a worker that rejoins after a churn window is pulled back to consensus
+  and the run keeps converging;
+* engine and trainer agree on the churn cell contract: dropout-0 churn
+  matches the plain cell, 30% dropout stays finite, and dropout VALUES
+  never split a compile/build class.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.gossip import masked_mixing_matrix, ring_mixing_matrix
+from repro.core.simulate import (
+    SimCfg,
+    engine_cache_stats,
+    quadratic_problem,
+    simulate_training_batch,
+    simulate_training_classbatch,
+)
+
+SCHEMES = ("bsp", "local", "ssp", "asp", "gossip")
+#: schemes whose masked aggregation is algebraically the churn-free mean when
+#: everyone is alive AND whose compiled programs reproduce it bitwise; the
+#: parameter-averaging / mixing schemes fuse differently and match to rtol
+BITWISE = ("bsp", "ssp", "asp")
+
+
+def _qsgd16():
+    from repro.core.compression.base import get_compressor
+
+    return get_compressor("qsgd", levels=16)
+
+
+def _cell(sync, **kw):
+    base = dict(sync=sync, n_workers=4, steps=12, lr=0.03, local_steps=4,
+                staleness=2, compressor=_qsgd16(), error_feedback=True, seed=7)
+    base.update(kw)
+    return SimCfg(**base)
+
+
+# ---------------------------------------------------------------------------
+# all-alive mask == today's path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sync", SCHEMES)
+def test_all_alive_mask_matches_churn_free(sync):
+    problem = quadratic_problem(dim=24, n_workers=4, noise=0.1, seed=3)
+    plain = simulate_training_batch(_cell(sync), problem)[0]
+    churn0 = simulate_training_batch(
+        _cell(sync, churn=True, dropout_rate=0.0), problem)[0]
+    for k in ("loss", "consensus", "bits"):
+        if sync in BITWISE:
+            np.testing.assert_array_equal(churn0[k], plain[k], err_msg=k)
+        else:
+            np.testing.assert_allclose(churn0[k], plain[k], rtol=1e-5,
+                                       atol=1e-6, err_msg=k)
+
+
+def test_single_alive_worker_matches_solo_sgd():
+    """worker_dropout (0,1,1,1): workers 1-3 never participate, so the
+    masked mean (denominator renormalized to 1) IS worker 0's gradient and
+    the trajectory is plain GD on worker 0's objective."""
+    dim, steps, lr = 16, 25, 0.05
+    problem = quadratic_problem(dim=dim, n_workers=4, noise=0.0, seed=1)
+    cfg = SimCfg(sync="bsp", n_workers=4, steps=steps, lr=lr,
+                 worker_dropout=(0.0, 1.0, 1.0, 1.0), seed=0)
+    r = simulate_training_batch(cfg, problem)[0]
+
+    A, b = np.asarray(problem.data["A"]), np.asarray(problem.data["b"])
+    x = np.zeros(dim, np.float32)
+    ref = []
+    for _ in range(steps):
+        x = x - lr * (A @ (x - b[0]))
+        ref.append(float(problem[1](x)))
+    np.testing.assert_allclose(r["loss"], ref, rtol=1e-5, atol=1e-6)
+    # the global model updates every row, so consensus is exactly zero and
+    # only the one live worker is charged wire bits (dense: 32 bits/coord)
+    assert float(np.max(r["consensus"])) == 0.0
+    assert float(r["bits"][-1]) == 32.0 * dim * steps
+
+
+# ---------------------------------------------------------------------------
+# renormalization: masked mixing matrices
+# ---------------------------------------------------------------------------
+
+
+def test_masked_mixing_matrix_properties(rng):
+    W = ring_mixing_matrix(6, 1.0 / 3.0).astype(np.float32)
+    for trial in range(20):
+        m = (rng.random(6) > 0.4).astype(np.float32)
+        Wm = np.asarray(masked_mixing_matrix(W, m))
+        # every row still sums to 1 (redistribute-to-self, not row division)
+        np.testing.assert_allclose(Wm.sum(axis=1), 1.0, atol=1e-6)
+        assert (Wm >= -1e-7).all()
+        for i in range(6):
+            if m[i] == 0.0:  # dead row: parameters freeze
+                np.testing.assert_array_equal(Wm[i], np.eye(6, dtype=np.float32)[i])
+        # live-live off-diagonal weights are untouched, so the live-live
+        # block of a symmetric W stays symmetric (mass conserved pairwise)
+        live = np.nonzero(m)[0]
+        for i in live:
+            for j in live:
+                if i != j:
+                    assert Wm[i, j] == W[i, j]
+                    assert Wm[i, j] == Wm[j, i]
+
+
+def test_masked_mixing_matrix_edge_masks():
+    W = ring_mixing_matrix(5, 0.25).astype(np.float32)
+    # all-ones mask reproduces W bitwise (the churn-free program's matrix)
+    np.testing.assert_array_equal(
+        np.asarray(masked_mixing_matrix(W, np.ones(5, np.float32))), W)
+    # all-dead round: nobody mixes, everyone freezes
+    np.testing.assert_array_equal(
+        np.asarray(masked_mixing_matrix(W, np.zeros(5, np.float32))),
+        np.eye(5, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# dropout VALUES are traced: one compile per churn class
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_values_share_one_engine_compile():
+    problem = quadratic_problem(dim=16, n_workers=4, noise=0.05, seed=2)
+    cells = [SimCfg(sync="bsp", n_workers=4, steps=20, lr=0.05,
+                    compressor=_qsgd16(), error_feedback=True,
+                    churn=True, dropout_rate=r, seed=5)
+             for r in (0.0, 0.1, 0.3)]
+    st = engine_cache_stats()
+    c0 = st.compiles
+    out = simulate_training_classbatch(cells, problem)
+    assert engine_cache_stats().compiles - c0 == 1, "dropout rate split a class"
+    for cell_res in out:
+        assert np.isfinite(cell_res[0]["loss"]).all()
+    # the batched dropout-0 member matches a churn-free standalone run
+    plain = simulate_training_batch(
+        SimCfg(sync="bsp", n_workers=4, steps=20, lr=0.05,
+               compressor=_qsgd16(), error_feedback=True, seed=5),
+        problem)[0]
+    np.testing.assert_allclose(out[0][0]["loss"], plain["loss"], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rejoin: a churn window ends and the stragglers are pulled back in
+# ---------------------------------------------------------------------------
+
+
+def test_rejoin_converges_after_churn_window():
+    """Workers 2/3 are dead for steps [0, 30) under local SGD, frozen at x0
+    while the live pair advances; once the window closes they rejoin at the
+    next sync round — consensus collapses and the loss keeps improving."""
+    problem = quadratic_problem(dim=32, n_workers=4, noise=0.0, seed=0)
+    cfg = SimCfg(sync="local", n_workers=4, steps=90, lr=0.05, local_steps=5,
+                 worker_dropout=(0.0, 0.0, 1.0, 1.0),
+                 churn_start=0, churn_end=30, seed=0)
+    r = simulate_training_batch(cfg, problem)[0]
+    assert np.isfinite(r["loss"]).all()
+    # inside the window the frozen pair keeps consensus elevated
+    assert r["consensus"][29] > 1e-3
+    # final sync after rejoin restores exact consensus and a better loss
+    assert r["consensus"][-1] < 1e-5
+    assert r["loss"][-1] < r["loss"][29]
+    assert r["loss"][-1] < r["loss"][0]
+
+
+# ---------------------------------------------------------------------------
+# trainer substrate: EF freeze + engine/trainer agreement on a churn cell
+# ---------------------------------------------------------------------------
+
+
+def _build_trainer(dropout_rate: float):
+    from repro.core.types import CommConfig
+    from repro.experiments.trainer_substrate import make_tiny_workload
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim.optimizers import momentum_sgd
+    from repro.optim.schedules import constant
+    from repro.train.steps import build_bundle
+    from repro.train.trainer import Trainer
+
+    cfg, shape, data = make_tiny_workload()
+    comm = CommConfig(compressor="qsgd", compressor_kwargs={"levels": 4},
+                      error_feedback=True, churn=True,
+                      dropout_rate=dropout_rate)
+    bundle = build_bundle(cfg, make_test_mesh(data=1, model=1), comm,
+                          momentum_sgd(0.0), shape, seed=0, microbatch=1)
+    return Trainer(bundle, data, constant(0.1), log_every=1)
+
+
+def _ef_norm(state) -> float:
+    return float(sum(np.abs(np.asarray(e)).max() for e in state["comm"]["ef"]))
+
+
+def test_ef_freezes_while_masked_out():
+    """A worker that is (almost surely) always masked out neither sends nor
+    accumulates: its EF residual stays exactly zero, while the same cell
+    with dropout 0 accumulates a nonzero qsgd residual — and the two cells
+    share ONE compiled bundle (dropout is a traced value)."""
+    from repro.train.steps import bundle_cache_stats
+
+    b0, h0 = bundle_cache_stats().builds, bundle_cache_stats().hits
+    alive_tr = _build_trainer(0.0)
+    dead_tr = _build_trainer(0.999999)
+    st = bundle_cache_stats()
+    assert st.builds - b0 == 1, "dropout value split the bundle class"
+    assert st.hits - h0 == 1
+
+    state_alive = alive_tr.fit(alive_tr.init(), 4)
+    state_dead = dead_tr.fit(dead_tr.init(), 4)
+    assert _ef_norm(state_alive) > 0.0
+    assert _ef_norm(state_dead) == 0.0
+    assert all(np.isfinite(h["loss"]) for h in dead_tr.history)
+
+
+def test_engine_and_trainer_agree_on_churn_cell():
+    """The shared churn-cell contract, checked on BOTH substrates: a
+    dropout-0 churn cell reproduces the plain cell, 30% dropout stays
+    finite, and the three cells span exactly two compile/build classes
+    (plain vs churn — never one per dropout value)."""
+    from repro.experiments import Scenario
+    from repro.experiments.runner import run_scenarios, training_shape_key
+    from repro.experiments.trainer_substrate import run_trainer_scenario
+    from repro.train.steps import bundle_cache_stats
+
+    def cell(**kw):
+        base = dict(sync="bsp", n_workers=4, steps=8, lr=0.05,
+                    compressor="qsgd", compressor_kwargs={"levels": 16},
+                    error_feedback=True, seed=0)
+        base.update(kw)
+        return Scenario(**base)
+
+    cells = [cell(),
+             cell(churn=True, dropout_rate=0.0),
+             cell(churn=True, dropout_rate=0.3)]
+    assert len({training_shape_key(s) for s in cells}) == 2
+
+    c0 = engine_cache_stats().compiles
+    plain, churn0, churn30 = run_scenarios(cells, "training")
+    assert engine_cache_stats().compiles - c0 <= 2
+    np.testing.assert_array_equal(churn0.series["loss"], plain.series["loss"])
+    assert np.isfinite(churn30.series["loss"]).all()
+
+    b0 = bundle_cache_stats().builds
+    t_plain, t_churn0, t_churn30 = (
+        run_trainer_scenario(s, data_par=1) for s in cells)
+    assert bundle_cache_stats().builds - b0 <= 2
+    np.testing.assert_allclose(t_churn0.series["loss_full"],
+                               t_plain.series["loss_full"], rtol=1e-6)
+    assert np.isfinite(t_churn30.series["loss_full"]).all()

@@ -11,7 +11,8 @@ from repro.core.compression.base import list_compressors
 
 f32 = jnp.float32
 
-UNBIASED = ["qsgd", "terngrad", "natural", "natural_dithering", "randomk", "wangni"]
+UNBIASED = ["qsgd", "terngrad", "natural", "natural_dithering", "randomk",
+            "wangni", "adaptive_qsgd"]
 SPARSE = ["topk", "gtopk", "randomk", "sbc", "stc"]
 
 
@@ -155,5 +156,128 @@ def test_registry_complete():
     for name in ("qsgd", "terngrad", "onebit", "signsgd", "natural", "topk",
                  "gtopk", "randomk", "wangni", "threshold", "adaptive_threshold",
                  "sbc", "stc", "atomo_svd", "variance_sparse",
-                 "qsgd_kernel", "terngrad_kernel", "signsgd_packed"):
+                 "qsgd_kernel", "terngrad_kernel", "signsgd_packed",
+                 "size_adaptive", "adaptive_qsgd"):
         assert name in known, name
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide round-trip properties (the property/chaos test lane).
+# The parametrized cases below are the always-on coverage; the hypothesis
+# variants re-run the same invariants over generated shapes/scales when the
+# optional dependency is installed.
+# ---------------------------------------------------------------------------
+
+#: adversarial inputs every registered compressor must survive: the shapes
+#: stay static and the reconstruction finite.  Scales stay inside the range
+#: where ||x||^2 fits f32 (norms square the coordinates).
+EXTREME_KINDS = ("gaussian", "zeros", "huge", "tiny", "spike")
+
+
+def _extreme(kind, n=256):
+    if kind == "gaussian":
+        return _vec(11, n=n)
+    if kind == "zeros":
+        return jnp.zeros((n,), f32)
+    if kind == "huge":
+        return jnp.full((n,), 1e15, f32).at[0].set(-1e15)
+    if kind == "tiny":
+        return _vec(12, n=n) * 1e-30
+    if kind == "spike":
+        return jnp.zeros((n,), f32).at[n // 2].set(1e6)
+    raise ValueError(kind)
+
+
+def _roundtrip_invariants(comp, key, x):
+    c = comp.compress(key, x)
+    assert c.n == x.size
+    xh = comp.decompress(c)
+    assert xh.shape == x.shape
+    assert xh.dtype == x.dtype
+    assert bool(jnp.all(jnp.isfinite(xh))), "non-finite reconstruction"
+    wb = comp.wire_bits(x.size)
+    assert wb != wb or wb > 0
+
+
+@pytest.mark.parametrize("kind", EXTREME_KINDS)
+@pytest.mark.parametrize("name", list_compressors())
+def test_roundtrip_shape_dtype_finite(name, kind):
+    """Every registered compressor — including the policy compressors —
+    preserves shape/dtype and returns finite values on adversarial inputs."""
+    _roundtrip_invariants(get_compressor(name), jax.random.key(0), _extreme(kind))
+
+
+@given(st.integers(8, 2048), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_roundtrip_shape_dtype_finite_generated(n, seed):
+    """Hypothesis variant: the same invariants over generated sizes/seeds."""
+    x = _vec(seed, n=n) * float(10.0 ** ((seed % 21) - 10))
+    for name in list_compressors():
+        _roundtrip_invariants(get_compressor(name), jax.random.key(seed), x)
+
+
+@given(st.floats(0.05, 2.0))
+@settings(max_examples=10, deadline=None)
+def test_adaptive_qsgd_unbiased_generated(var_target):
+    """The variance-feedback policy stays unbiased at ANY target (float
+    level counts included) — the claim its registry entry makes."""
+    comp = get_compressor("adaptive_qsgd", var_target=var_target)
+    x = _vec(13, n=128)
+    keys = jax.random.split(jax.random.key(14), 400)
+    est = jnp.mean(jax.vmap(lambda k: comp.decompress(comp.compress(k, x)))(keys), axis=0)
+    assert float(jnp.linalg.norm(est - x) / jnp.linalg.norm(x)) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Policy compressors (Hivemind-style size routing + variance feedback).
+# ---------------------------------------------------------------------------
+
+
+def test_size_adaptive_routes_by_size():
+    """Above the element threshold: int8 payload (8n+32 bits); below: fp16
+    (16n bits).  The routed reconstruction stays close to the input."""
+    comp = get_compressor("size_adaptive", threshold=128)
+    small, big = _vec(20, n=64), _vec(21, n=256)
+    c_small = comp.compress(jax.random.key(0), small)
+    c_big = comp.compress(jax.random.key(0), big)
+    assert set(c_small.payload) == {"half"}
+    assert set(c_big.payload) == {"q8", "scale"}
+    assert c_big.payload["q8"].dtype == jnp.int8
+    assert comp.wire_bits(64) == 64 * 16.0
+    assert comp.wire_bits(256) == 256 * 8.0 + 32
+    for x, c in ((small, c_small), (big, c_big)):
+        xh = comp.decompress(c)
+        assert float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x)) < 0.02
+
+
+def test_size_adaptive_traced_threshold_matches_static():
+    """The engine traces the threshold (BATCH_KNOBS): roundtrip_p with the
+    threshold as a value must reproduce the statically-routed compress path
+    on BOTH sides of the boundary."""
+    from repro.core.compression.base import batch_param_values, roundtrip_bits
+
+    for thr, n in ((128, 64), (128, 256)):
+        comp = get_compressor("size_adaptive", threshold=thr)
+        x = _vec(22, n=n)
+        k = jax.random.key(1)
+        xh = comp.decompress(comp.compress(k, x))
+        xh2, bits = roundtrip_bits(comp, k, x, batch_param_values(comp, n))
+        np.testing.assert_allclose(np.asarray(xh), np.asarray(xh2), rtol=1e-6)
+        assert float(bits) == comp.wire_bits(n)
+
+
+def test_adaptive_qsgd_levels_track_dispersion():
+    """Variance feedback: a dispersed (dense Gaussian) vector draws more
+    levels than a spiky one at the same target, and a tighter target raises
+    the level count."""
+    comp = get_compressor("adaptive_qsgd", var_target=0.5)
+    dense = _vec(23, n=256)
+    spiky = jnp.zeros((256,), f32).at[:4].set(100.0)
+    s_dense = float(comp.compress(jax.random.key(0), dense).payload["s"][0])
+    s_spiky = float(comp.compress(jax.random.key(0), spiky).payload["s"][0])
+    assert s_dense > s_spiky, (s_dense, s_spiky)
+    tight = get_compressor("adaptive_qsgd", var_target=0.1)
+    s_tight = float(tight.compress(jax.random.key(0), dense).payload["s"][0])
+    assert s_tight > s_dense, (s_tight, s_dense)
+    # the int8 wire format caps the level count
+    assert s_tight <= 127.0
