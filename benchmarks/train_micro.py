@@ -38,7 +38,10 @@ def run() -> list[Row]:
         vocab=256, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, n_layers=2
     )
     shape = InputShape("bench", 64, 8, "train")
-    mesh = make_test_mesh(1, 1)
+    # >= 2 data shards when the host has forced devices so the wire columns
+    # (dense f32 vs compressed packed1/int8 formats) are nonzero
+    dp = 2 if len(jax.devices()) >= 2 else 1
+    mesh = make_test_mesh(dp, 1)
     data = SyntheticBatches(cfg, shape).batch(0)
     batch = {k: jnp.asarray(v) for k, v in data.items()}
     from repro.models.transformer import init_params
@@ -51,6 +54,11 @@ def run() -> list[Row]:
         ("topk1pct_ef", CommConfig(compressor="topk", compressor_kwargs={"ratio": 0.01},
                                    error_feedback=True)),
         ("signsgd_mv", CommConfig(compressor="signsgd")),
+        ("signsgd_cwire", CommConfig(compressor="signsgd",
+                                     wire_format="compressed")),
+        ("qsgd16_cwire", CommConfig(compressor="qsgd",
+                                    compressor_kwargs={"levels": 16},
+                                    wire_format="compressed")),
         ("topk_bucketed", CommConfig(compressor="topk", compressor_kwargs={"ratio": 0.01},
                                      error_feedback=True, bucket_mb=4)),
         ("gossip_dpsgd", CommConfig(aggregator="gossip")),
@@ -75,7 +83,12 @@ def run() -> list[Row]:
         wkey = "gossip" if comm.aggregator == "gossip" else "train"
         by_tag = (bundle.wire or {}).get(wkey, {})
         wire = by_tag.get("grad_agg", 0.0) + by_tag.get("gossip_mix", 0.0)
-        rows.append(Row(f"train_micro/{tag}", us, f"agg_wire={wire/1e3:.1f}KB_per_step"))
+        fmts = (bundle.wire or {}).get(wkey + "_formats", {})
+        fmt_note = "+".join(f"{f}:{b/1e3:.1f}KB"
+                            for f, b in sorted(fmts.items()) if b > 0)
+        rows.append(Row(f"train_micro/{tag}", us,
+                        f"agg_wire={wire/1e3:.1f}KB_per_step"
+                        + (f"_[{fmt_note}]" if fmt_note else "")))
 
     rows.extend(_trainer_sweep_rows())
     return rows

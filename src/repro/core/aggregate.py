@@ -13,6 +13,14 @@ Aggregation strategies by compressor ``reduce_mode``:
     (memory-bounded fori loop; (values,indices) payloads use one scatter-add).
   * "sum": payload is dense-masked; psum then average.
   * "majority": psum of int8 signs, then sign() — SignSGD majority vote [173].
+
+``CommConfig.wire_format="compressed"`` overrides the above for families
+with a ``wire_reduce`` attribute: the wire carries the PACKED payload
+(1-bit sign bitmaps, 2-bit ternary codes, int8 quantizer codes — or bf16
+for the dense path) and a fused Pallas unpack+accumulate kernel
+(repro.kernels.wire_reduce) reduces all workers in one pass.  With EF and
+a fused-capable compressor (qsgd_kernel), the EF add + quantize + residual
+update collapse into ``compress_ef_p`` as well.
 """
 
 from __future__ import annotations
@@ -176,6 +184,73 @@ def _powersgd_aggregate(compressor, a, q_flat, axes, n_workers):
     return agg, Qn.reshape(-1)
 
 
+def _gather_alive(alive: jax.Array | None, axes) -> jax.Array | None:
+    """Churn participation bits of every worker, (W,) f32 (None when no churn)."""
+    if alive is None:
+        return None
+    return comms.all_gather(alive.reshape(1), axes, axis=0).reshape(-1)
+
+
+def _int8_code_reduce(compressor, c: Compressed, p, axes, alive_g, denom):
+    """int8_acc wire reduction: all-gather the int8 codes AT WIRE WIDTH (the
+    (W, n) f32 decode is never materialized) and fold each worker's decode
+    scale norm_w/levels_w — and its churn mask — into the per-worker weight
+    of one fused widening-accumulate kernel."""
+    from repro.kernels import ops
+
+    cg = comms.all_gather_compressed({"code": c.payload["code"]}, axes)["code"]
+    ng = comms.all_gather(c.payload["norm"], axes, axis=0).reshape(-1)
+    if "s" in c.payload:
+        sg = comms.all_gather(c.payload["s"], axes, axis=0).reshape(-1)
+    else:
+        sg = jnp.asarray((p or {}).get("levels", compressor.levels), f32)
+    w = ng / sg
+    if alive_g is not None:
+        w = w * alive_g
+    return ops.int8_weighted_sum(cg, w) / denom
+
+
+def _compressed_reduce(compressor, key, a, axes, p, alive_g, denom):
+    """Compressed-domain aggregation (``wire_format="compressed"``): the wire
+    carries the PACKED/narrow payload and a fused Pallas kernel decodes and
+    accumulates all workers in one pass.  Returns (aggregated mean,
+    self decompressed C(a)).
+
+    Exactness vs the composed dense path: sign majority is bit-identical to
+    the unpacked int8 psum (both compare the same integer-valued f32 vote
+    sums, ties -> +1); ternary accumulate is exact (every product has an
+    exact {-1,0,+1} factor); int8_acc differs only by reassociating
+    code/s*norm into code*(norm/s) (~1 ulp)."""
+    from repro.kernels import ops
+
+    wr = compressor.wire_reduce
+
+    if wr in ("sign_vote", "sign_acc"):
+        # pack straight from a — the int8 sign payload is never formed
+        packed = ops.sign_pack(a)
+        with comms.wire_format("packed1"):
+            pg = comms.all_gather(packed, axes, axis=0)
+        w = jnp.ones((pg.shape[0],), f32) if alive_g is None else alive_g
+        votes = ops.sign_vote(pg, w, n=a.size)
+        self_hat = jnp.where(a >= 0, 1.0, -1.0).astype(f32)
+        if wr == "sign_vote":  # majority: masked shards cast zero votes
+            return jnp.where(votes >= 0, 1.0, -1.0).astype(f32), self_hat
+        return votes / denom, self_hat  # mean of ±1 votes
+
+    c = compress_p(compressor, key, a, p)
+    self_hat = decompress_p(compressor, c, p)
+    if wr == "tern_acc":
+        packed = ops.tern_pack(c.payload["tern"])
+        with comms.wire_format("packed2"):
+            pg = comms.all_gather(packed, axes, axis=0)
+        sg = comms.all_gather(c.payload["scale"], axes, axis=0).reshape(-1)
+        w = sg if alive_g is None else sg * alive_g
+        return ops.tern_acc(pg, w, n=c.n) / denom, self_hat
+    if wr == "int8_acc":
+        return _int8_code_reduce(compressor, c, p, axes, alive_g, denom), self_hat
+    raise ValueError(f"unknown wire_reduce {wr!r} on {compressor!r}")
+
+
 def _aggregate_one(
     comm: CommConfig,
     compressor,
@@ -197,14 +272,24 @@ def _aggregate_one(
         n_workers *= compat_axis_size(axn)
     denom = n_workers if n_eff is None else n_eff
 
+    wire_fmt = getattr(comm, "wire_format", "dense")
+
     if compressor is None:
         a_m = a if alive is None else a * alive
-        if comm.agg_dtype == "bfloat16":
+        if wire_fmt == "compressed":
+            # bf16 wire format, f32 accumulation: half the wire bytes of the
+            # dense path without the bf16-psum partial-sum rounding
+            agg = comms.widening_psum(a_m.astype(jnp.bfloat16), axes) / denom
+        elif comm.agg_dtype == "bfloat16":
             a16 = a_m.astype(jnp.bfloat16)
             agg = collectives.allreduce(a16, axes, impl=comm.collective).astype(f32) / denom
         else:
             agg = collectives.allreduce(a_m, axes, impl=comm.collective) / denom
         return agg, a
+
+    if wire_fmt == "compressed" and getattr(compressor, "wire_reduce", ""):
+        return _compressed_reduce(compressor, key, a, axes, p,
+                                  _gather_alive(alive, axes), denom)
 
     c = compress_p(compressor, key, a, p)
     self_hat = decompress_p(compressor, c, p)
@@ -305,10 +390,32 @@ def aggregate_buckets(
     if "psgd_q" in state:
         state["psgd_q"] = list(state["psgd_q"])
 
+    wire_fmt = getattr(comm, "wire_format", "dense")
     out_bufs = []
     with comms.tag("grad_agg"):
         for i, (b, g) in enumerate(zip(plan.buckets, bufs)):
             compressor = plan.compressor(b)
+            p_i = knobs["comp"][i] if knobs is not None else None
+            if (wire_fmt == "compressed" and comm.error_feedback
+                    and not comm.momentum_correction and not comm.local_clip
+                    and hasattr(compressor, "compress_ef_p")):
+                # fused EF+quantize (kernels/qsgd_ef.py): one Pallas pass
+                # yields the int8 WIRE codes and the residual update, so
+                # pre/post_compress collapse into the kernel; same uniform
+                # draw as the composed path (momentum correction or local
+                # clipping would need the unfused arithmetic — excluded)
+                decay = (knobs["ef_decay"] if knobs is not None
+                         else jnp.asarray(comm.ef_decay, f32))
+                ef_prev = state["ef"][i]
+                c, e_new = compressor.compress_ef_p(
+                    jax.random.fold_in(key, i), g, ef_prev, p_i, decay)
+                state["ef"][i] = (e_new if alive is None
+                                  else jnp.where(alive > 0, e_new, ef_prev))
+                denom = n_workers if n_eff is None else n_eff
+                out_bufs.append(_int8_code_reduce(
+                    compressor, c, p_i, axes, _gather_alive(alive, axes),
+                    denom))
+                continue
             a = feedback.pre_compress(comm, g, state, i, n_workers,
                                       knobs=knobs, alive=alive)
             if getattr(compressor, "reduce_mode", "") == "powersgd":
@@ -320,8 +427,7 @@ def aggregate_buckets(
             else:
                 agg, self_hat = _aggregate_one(
                     comm, compressor, jax.random.fold_in(key, i), a, axes,
-                    knobs["comp"][i] if knobs is not None else None,
-                    alive=alive, n_eff=n_eff,
+                    p_i, alive=alive, n_eff=n_eff,
                 )
             if compressor is not None:
                 feedback.post_compress(comm, a, self_hat, state, i, alive=alive)

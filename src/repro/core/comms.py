@@ -39,6 +39,7 @@ class CollRecord:
     mult: float  # loop multiplicity
     n_workers: int = 1  # product of the collective's axis sizes
     tag: str = ""
+    wire_format: str = "f32"  # actual on-wire encoding: f32|bf16|int8|packed1|packed2|...
 
     @property
     def wire_bytes(self) -> float:
@@ -78,11 +79,25 @@ class CommLog:
             out[r.kind] = out.get(r.kind, 0.0) + r.wire_bytes * r.mult
         return out
 
-    def by_tag(self) -> dict[str, float]:
+    def by_tag(self, *, with_format: bool = False) -> dict[str, float]:
+        """Wire bytes per tag; ``with_format=True`` splits each tag by the
+        payload's actual on-wire encoding (``"grad_agg[packed1]"``)."""
         out: dict[str, float] = {}
         for r in self.records:
             key = r.tag or "untagged"
+            if with_format:
+                key = f"{key}[{r.wire_format}]"
             out[key] = out.get(key, 0.0) + r.wire_bytes * r.mult
+        return out
+
+    def by_wire_format(self, *, payload: bool = False) -> dict[str, float]:
+        """Bytes per on-wire encoding — wire bytes by default, raw local
+        payload bytes with ``payload=True`` (mesh-size independent, what the
+        32x packed-vs-dense claims are stated in)."""
+        out: dict[str, float] = {}
+        for r in self.records:
+            b = r.payload_bytes if payload else r.wire_bytes
+            out[r.wire_format] = out.get(r.wire_format, 0.0) + b * r.mult
         return out
 
 
@@ -96,6 +111,10 @@ def _mult() -> float:
 
 def _tag() -> str:
     return getattr(_STATE, "tag", "")
+
+
+def _wire_fmt() -> str:
+    return getattr(_STATE, "wire_fmt", "")
 
 
 @contextlib.contextmanager
@@ -130,8 +149,39 @@ def tag(name: str):
         _STATE.tag = prev
 
 
+@contextlib.contextmanager
+def wire_format(name: str):
+    """Override the recorded on-wire encoding for collectives issued inside.
+    Needed where the array dtype under-describes the packing (a uint8 sign
+    bitmap is 1 bit/element -> ``packed1``, a 2-bit ternary payload ->
+    ``packed2``); plain narrow dtypes (int8/bf16) are derived automatically
+    from the payload leaves."""
+    prev = _wire_fmt()
+    _STATE.wire_fmt = name
+    try:
+        yield
+    finally:
+        _STATE.wire_fmt = prev
+
+
 def _bytes(x) -> int:
     return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+
+
+_DTYPE_FMT = {
+    "float32": "f32", "bfloat16": "bf16", "float16": "f16",
+    "int8": "int8", "uint8": "int8", "int32": "int32",
+}
+
+
+def _fmt_of(x) -> str:
+    """Derive the wire format from the payload's dominant (largest) leaf."""
+    leaves = jax.tree.leaves(x)
+    if not leaves:
+        return "f32"
+    big = max(leaves, key=_bytes)
+    name = jnp.dtype(big.dtype).name
+    return _DTYPE_FMT.get(name, name)
 
 
 def _record(kind: str, axes, x) -> None:
@@ -147,7 +197,9 @@ def _record(kind: str, axes, x) -> None:
             n *= compat_axis_size(a)
     except Exception:  # outside shard_map (e.g. unit tests): size unknown
         n = 1
-    log.records.append(CollRecord(kind, tuple(axes), total, _mult(), n, _tag()))
+    fmt = _wire_fmt() or _fmt_of(x)
+    log.records.append(
+        CollRecord(kind, tuple(axes), total, _mult(), n, _tag(), fmt))
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +248,27 @@ def psum_scatter(x, axis_name, *, scatter_dimension: int = 0, tiled: bool = True
     return jax.lax.psum_scatter(
         x, axis_name, scatter_dimension=scatter_dimension, tiled=tiled
     )
+
+
+def all_gather_compressed(payload: dict, axes, *, axis: int = 0) -> dict:
+    """All-gather a compressed wire payload dict (codes + per-tensor scales)
+    leaf by leaf.  Each leaf is recorded at its ACTUAL dtype bytes — an int8
+    code array logs N bytes, not the 4N of its dense decode — so `CommLog`
+    accounting reflects what the wire carries.  Use ``wire_format(...)``
+    around the call when the dtype under-describes the packing."""
+    return {k: all_gather(v, axes, axis=axis) for k, v in payload.items()}
+
+
+def widening_psum(x, axes):
+    """All-reduce with a narrow wire dtype but f32 accumulation: gather the
+    narrow payload (recorded at its actual byte width) and sum widened, so
+    e.g. a bf16 wire format never rounds partial sums to bf16.  Costs
+    p(n-1) wire vs psum's 2p(n-1)/n — cheaper than a dense-f32 psum for
+    any sub-f32 payload at moderate n."""
+    if isinstance(axes, (list, tuple)) and not axes:
+        return x.astype(jnp.float32)
+    g = all_gather(x, axes, axis=0)
+    return jnp.sum(g.astype(jnp.float32), axis=0)
 
 
 def varying(x, axes):

@@ -32,6 +32,7 @@ class QSGDKernel:
     levels: int = 16
     unbiased: bool = True
     reduce_mode: str = "none"
+    wire_reduce: str = "int8_acc"  # compressed-domain: int8 codes on the wire
     BATCH_KNOBS = ("levels",)
     RUNTIME_KNOBS = ("levels",)
 
@@ -84,6 +85,18 @@ class QSGDKernel:
         out, e_new, _ = self.roundtrip_ef_p(key, g, e, {})
         return out, e_new
 
+    def compress_ef_p(self, key, g, e, p, decay):
+        """Fused EF+quantize that returns the WIRE payload (for the
+        compressed-domain aggregation path): one Pallas pass yields the int8
+        codes and the residual update, with levels and decay traced.  Uses
+        the same uniform draw as ``compress_p`` after ``pre_compress``'s
+        a = e*decay + g, so the codes match the composed path bit for bit
+        (the residual differs by one reciprocal rounding)."""
+        lv = (p or {}).get("levels", self.levels)
+        u = jax.random.uniform(key, g.shape)
+        codes, norm, e_new = ops.qsgd_ef_fused(g, e, u, levels=lv, decay=decay)
+        return Compressed({"code": codes, "norm": norm}, g.size), e_new
+
     def wire_bits(self, n) -> float:
         import math
 
@@ -95,6 +108,7 @@ class QSGDKernel:
 class TernGradKernel:
     unbiased: bool = True
     reduce_mode: str = "none"
+    wire_reduce: str = "tern_acc"  # compressed-domain: 2-bit packed wire
 
     def compress(self, key, x) -> Compressed:
         u = jax.random.uniform(key, x.shape)
@@ -115,6 +129,7 @@ class SignSGDPacked:
 
     unbiased: bool = False
     reduce_mode: str = "none"
+    wire_reduce: str = "sign_acc"  # compressed-domain: mean of ±1 votes
 
     def compress(self, key, x) -> Compressed:
         return Compressed({"packed": ops.sign_pack(x)}, x.size)

@@ -53,6 +53,7 @@ class TernGrad:
     unbiased: bool = True
     reduce_mode: str = "none"
     clip_sigma: float = 0.0  # optional gradient clipping (paper §V TernGrad)
+    wire_reduce = "tern_acc"  # compressed-domain: 2-bit packed wire
     BATCH_KNOBS = ("clip_sigma",)
     #: clip_sigma only rescales values — the (tern, scale) payload keeps its
     #: shape, so the runtime layer can trace it too
@@ -93,6 +94,7 @@ class QSGD:
     levels: int = 16  # s
     unbiased: bool = True
     reduce_mode: str = "none"
+    wire_reduce = "int8_acc"  # compressed-domain: int8 codes on the wire
     BATCH_KNOBS = ("levels",)
     #: levels only rescales the int8 codes — payload shape is knob-free, so
     #: the runtime aggregation layer traces it too (one bundle per family)
@@ -166,6 +168,7 @@ class SignSGD:
 
     unbiased: bool = False
     reduce_mode: str = "majority"
+    wire_reduce = "sign_vote"  # compressed-domain: 1-bit packed majority
 
     def compress(self, key, x) -> Compressed:
         return Compressed({"sign": jnp.where(x >= 0, 1, -1).astype(jnp.int8)}, x.size)

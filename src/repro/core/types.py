@@ -81,6 +81,18 @@ class CommConfig:
     #: the staleness-1 pipelined update (traced knob; 1.0 = plain average).
     stale_scale: float = 1.0
 
+    # --- wire format (paper §V-§VII: compressed-domain collectives) ------------
+    #: "dense"      — decompress to dense f32 before the reduce (fidelity
+    #:                baseline; what every cell did before this axis existed);
+    #: "compressed" — the wire carries the COMPRESSED payload and reduction
+    #:                happens in (or near) the compressed domain via fused
+    #:                Pallas unpack+accumulate kernels: 1-bit packed sign
+    #:                majority vote, 2-bit packed ternary accumulate, int8
+    #:                widening accumulate, or (compressor "none") a bf16 wire
+    #:                with f32 widening accumulation.  STRUCTURAL: it swaps
+    #:                psum for gather+kernel programs.
+    wire_format: str = "dense"
+
     # --- churn / elastic workers (survey future directions) --------------------
     #: carry a per-round participation mask through aggregation/mixing —
     #: STRUCTURAL (the masked program renormalizes denominators); the
@@ -134,6 +146,9 @@ class BundleSpec:
     overlap_staleness: int = 0
     #: participation mask carried through aggregation/mixing (values traced)
     churn: bool = False
+    #: "compressed" swaps the aggregation psum for gather+fused-kernel
+    #: programs (normalized to "dense" for gossip, which mixes parameters)
+    wire_format: str = "dense"
 
 
 def bundle_spec(comm: CommConfig) -> BundleSpec:
@@ -174,6 +189,22 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
             # factor psums have no per-worker mask semantics
             raise ValueError("powersgd is unsupported under churn")
     comp = get_compressor(comm.compressor, **comm.compressor_kwargs)
+    if comm.wire_format not in ("dense", "compressed"):
+        raise ValueError(f"unknown wire_format {comm.wire_format!r}")
+    wire_fmt = comm.wire_format if comm.aggregator != "gossip" else "dense"
+    if wire_fmt == "compressed":
+        # only families with a linear int-code payload (or dense -> bf16
+        # wire) reduce in the compressed domain; reject, don't approximate
+        if comp is not None and not getattr(comp, "wire_reduce", ""):
+            raise ValueError(
+                f"wire_format='compressed' is unsupported for compressor "
+                f"{comm.compressor!r}: no compressed-domain reduction "
+                "(supported: the sign/terngrad/qsgd families, or 'none' "
+                "for a bf16 wire with f32 widening accumulation)")
+        if comm.agg_dtype == "bfloat16" and comp is not None:
+            raise ValueError(
+                "agg_dtype='bfloat16' only shapes the dense aggregation "
+                "path — meaningless combined with a compressed wire format")
     return BundleSpec(
         sync=comm.sync,
         pod_local=bool(comm.pod_local),
@@ -199,6 +230,7 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
                            if comm.overlap == "pipelined"
                            and comm.aggregator != "gossip" else 0),
         churn=churn,
+        wire_format=wire_fmt,
     )
 
 

@@ -28,6 +28,16 @@ ARCHITECTURES = ("ps", "allreduce", "gossip")
 SCHEDULE_MODES = ("sequential", "wfbp", "mgwfbp", "pipelined")
 OVERLAP_MODES = ("sequential", "pipelined")
 SUBSTRATES = ("timeline", "training", "schedule", "roofline", "trainer")
+#: registry names whose compressors define a compressed-domain wire
+#: reduction (a ``wire_reduce`` class attribute).  Kept as a static set so
+#: ``expand()`` can filter grids WITHOUT importing jax (the trainer CLI
+#: forces host devices before jax initializes); ``bundle_spec`` re-checks
+#: the authoritative attribute at build time, so a drifted entry here fails
+#: loudly rather than silently.
+WIRE_REDUCE_FAMILIES = frozenset({
+    "signsgd", "signsgd_packed", "terngrad", "terngrad_kernel",
+    "qsgd", "qsgd_kernel",
+})
 
 #: sync schemes that only exist in the simulators (no single SPMD program
 #: can express bounded staleness / full asynchrony — repro.core.sync).
@@ -65,6 +75,13 @@ class Scenario:
     compressor: str | None = None  # repro.core.compression registry name
     compressor_kwargs: tuple = ()  # frozen (key, value) pairs
     error_feedback: bool = False
+    #: EXECUTABLE wire-format axis (trainer substrate): "compressed" keeps
+    #: the payload packed across the wire (1-bit sign, 2-bit ternary, int8
+    #: codes, bf16 dense) and reduces via fused Pallas unpack+accumulate
+    #: kernels — STRUCTURAL (swaps psum for gather+kernel programs).  Sign
+    #: majority stays bit-identical to the dense path; qsgd/terngrad stay
+    #: within reassociation tolerance (see README "Performance").
+    wire_format: str = "dense"  # dense | compressed
 
     # --- scheduling (§VII) ---------------------------------------------------
     schedule: str = "wfbp"  # sequential | wfbp | mgwfbp | pipelined (DAG model)
@@ -153,6 +170,8 @@ class Scenario:
             comp += "[" + ",".join(f"{k}={v}" for k, v in self.compressor_kwargs) + "]"
         if self.error_feedback:
             comp += "_ef"
+        if self.wire_format != "dense":
+            comp += "+cwire"
         sched = self.schedule
         if sched == "mgwfbp":
             sched += f"_{self.bucket_bytes / 1e6:g}MB"
@@ -210,6 +229,17 @@ class Scenario:
                 v.append("pipelined overlap aggregates gradients (gossip mixes parameters)")
             if self.sync != "bsp":
                 v.append("pipelined overlap needs per-step aggregation (sync must be bsp)")
+        if self.wire_format not in ("dense", "compressed"):
+            v.append(f"unknown wire_format {self.wire_format!r}")
+        elif self.wire_format == "compressed":
+            if self.arch == "gossip":
+                v.append("compressed wire formats shape gradient aggregation "
+                         "(gossip mixes parameters)")
+            if (self.compressor is not None
+                    and self.compressor not in WIRE_REDUCE_FAMILIES):
+                v.append(f"compressor {self.compressor!r} has no "
+                         "compressed-domain reduction (sign/terngrad/"
+                         "qsgd families only)")
         # pod-local is BSP inside each pod by construction; the loose outer
         # boundary is the Local-SGD axis — stale schemes don't compose.
         if self.pod_local and self.sync not in ("bsp", "local"):
@@ -247,6 +277,9 @@ class Scenario:
             if substrate not in ("trainer",) and self.overlap == "pipelined":
                 v.append("the overlap axis is runtime-only (the schedule "
                          "substrate models it via schedule='pipelined')")
+            if substrate not in ("trainer",) and self.wire_format == "compressed":
+                v.append("the wire_format axis is runtime-only (the "
+                         "simulators model wire width analytically)")
             if substrate == "training" and self.arch == "gossip" and self.sync != "bsp":
                 v.append("gossip training is a synchronous mixing round (sync must be bsp)")
             if self.churn and substrate not in ("training", "trainer"):

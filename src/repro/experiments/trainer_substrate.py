@@ -40,6 +40,7 @@ def to_comm_config(s: Scenario):
         overlap=s.overlap,
         overlap_staleness=s.overlap_staleness,
         stale_scale=s.stale_scale,
+        wire_format=s.wire_format,
         churn=s.churn,
         dropout_rate=s.dropout_rate,
         churn_start=s.churn_start,
@@ -140,6 +141,14 @@ def trainer_wire_per_step(s: Scenario, wire: dict[str, dict[str, float]]) -> flo
         rounds = _phase_sync_steps(s, s.steps)
         return (s.post_local_switch * ga + rounds * (ga + ls)) / s.steps
     return ga
+
+
+def trainer_wire_formats(s: Scenario, wire: dict) -> dict[str, float]:
+    """Per-encoding wire bytes of the cell's aggregation/mixing program (one
+    program invocation), from the bundle artifact's ``*_formats`` breakdown —
+    shows WHAT the wire carried (f32 vs bf16 vs int8 vs packed1/packed2)."""
+    key = "gossip_formats" if s.arch == "gossip" else "train_formats"
+    return dict(wire.get(key, {}))
 
 
 def plan_payload_bytes(plan) -> float:
@@ -257,6 +266,10 @@ def run_trainer_scenario(
         "step_time_s": float(step_s),
         "wire_kb_per_step": trainer_wire_per_step(s, bundle.wire or {}) / 1e3,
         "sync_rounds": float(sync_rounds(s, s.steps)),
+        "wire_format_kb": {
+            fmt: b / 1e3
+            for fmt, b in trainer_wire_formats(s, bundle.wire or {}).items()
+        },
     }
     predicted: dict[str, Any] = {}
     if s.overlap == "pipelined":

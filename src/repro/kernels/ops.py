@@ -14,6 +14,7 @@ from repro.kernels import qsgd_ef as _qsgd_ef
 from repro.kernels import sign_pack as _sign
 from repro.kernels import terngrad as _tern
 from repro.kernels import threshold_sparsify as _thr
+from repro.kernels import wire_reduce as _wire
 from repro.kernels import wkv6 as _wkv
 
 f32 = jnp.float32
@@ -98,6 +99,65 @@ def sign_unpack(packed: jax.Array, n: int) -> jax.Array:
     """Inverse of sign_pack (same interleaved layout)."""
     x3 = _sign.sign_unpack_3d(packed.reshape(-1, _sign.LANES), interpret=_interpret())
     return x3.reshape(-1)[:n]
+
+
+def _worker_weights(weights: jax.Array, n_w: int) -> jax.Array:
+    """(W,) f32 per-worker weights -> (W, 128) lane-broadcast kernel input."""
+    return jnp.broadcast_to(weights.astype(f32).reshape(n_w, 1),
+                            (n_w, _wire.LANES))
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sign_vote(packed: jax.Array, weights: jax.Array, *, n: int) -> jax.Array:
+    """Gathered packed bitmaps (W, bytes) + per-worker vote weights (W,) ->
+    weighted vote sums (n,) f32: sum_w weights[w]*(2*bit-1), decoded and
+    accumulated in ONE Pallas pass (the packed payload never expands to a
+    per-worker dense decode in HBM).  sign_pack's +1 pad bits only affect
+    the sliced-off tail."""
+    n_w = packed.shape[0]
+    p3 = packed.reshape(n_w, -1, _wire.LANES)
+    votes = _wire.sign_vote_3d(p3, _worker_weights(weights, n_w),
+                               interpret=_interpret())
+    return votes.reshape(-1)[:n]
+
+
+@jax.jit
+def tern_pack(tern: jax.Array) -> jax.Array:
+    """int8 {-1,0,+1} (n,) -> 2-bit/element uint8 wire payload (returns the
+    full padded byte array; zero pad slots decode to 0 so accumulation is
+    unaffected).  Layout matches ``tern_acc``."""
+    n = tern.size
+    tile = _wire.BLOCK_ROWS * 4 * _wire.LANES
+    pad = (-n) % tile
+    t3 = jnp.pad(tern.reshape(-1), (0, pad)).reshape(-1, 4, _wire.LANES)
+    return _wire.tern_pack_3d(t3, interpret=_interpret()).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def tern_acc(packed: jax.Array, weights: jax.Array, *, n: int) -> jax.Array:
+    """Gathered 2-bit payloads (W, bytes) + per-worker weights (W,) (e.g.
+    ternary scale x churn mask) -> sum_w weights[w]*tern_w as (n,) f32,
+    decode fused with the accumulate."""
+    n_w = packed.shape[0]
+    p3 = packed.reshape(n_w, -1, _wire.LANES)
+    out = _wire.tern_acc_3d(p3, _worker_weights(weights, n_w),
+                            interpret=_interpret())
+    return out.reshape(-1)[:n]
+
+
+@jax.jit
+def int8_weighted_sum(codes: jax.Array, weights: jax.Array) -> jax.Array:
+    """Gathered int8 quantizer codes (W, n) + per-worker decode weights (W,)
+    (norm_w/levels x churn mask) -> sum_w weights[w]*codes[w] as (n,) f32.
+    The widening accumulate happens inside the kernel — the (W, n) f32
+    decode is never materialized."""
+    n_w, n = codes.shape
+    tile = _wire.BLOCK_ROWS * _wire.LANES
+    pad = (-n) % tile
+    c3 = jnp.pad(codes, ((0, 0), (0, pad))).reshape(n_w, -1, _wire.LANES)
+    out = _wire.int8_acc_3d(c3, _worker_weights(weights, n_w),
+                            interpret=_interpret())
+    return out.reshape(-1)[:n]
 
 
 @jax.jit

@@ -49,6 +49,33 @@ def sign_unpack_ref(packed: jax.Array) -> jax.Array:
     return signs.reshape(*packed.shape[:-1], -1)
 
 
+def sign_vote_ref(signs: jax.Array, weights: jax.Array) -> jax.Array:
+    """signs (W, n) in {-1,+1}, weights (W,) -> weighted vote sums (n,)."""
+    return jnp.sum(signs.astype(f32) * weights.astype(f32)[:, None], axis=0)
+
+
+def tern_pack_ref(tern: jax.Array) -> jax.Array:
+    """tern (..., 4k) int8 in {-1,0,+1} -> (..., k) uint8; 2-bit slots with
+    code 0=zero, 1=+1, 3=-1 (bit0 nonzero, bit1 negative)."""
+    t = tern.reshape(*tern.shape[:-1], -1, 4)
+    code = (t != 0).astype(jnp.uint8) | ((t < 0).astype(jnp.uint8) << 1)
+    shifts = (2 * jnp.arange(4, dtype=jnp.uint8)).astype(jnp.uint8)
+    return jnp.sum(code << shifts, axis=-1, dtype=jnp.uint8)
+
+
+def tern_unpack_ref(packed: jax.Array) -> jax.Array:
+    """(..., k) uint8 -> (..., 4k) f32 in {-1, 0, +1}."""
+    shifts = (2 * jnp.arange(4, dtype=jnp.uint8)).astype(jnp.uint8)
+    slot = (packed[..., None] >> shifts) & 3
+    val = (slot == 1).astype(f32) - (slot == 3).astype(f32)
+    return val.reshape(*packed.shape[:-1], -1)
+
+
+def weighted_sum_ref(vals: jax.Array, weights: jax.Array) -> jax.Array:
+    """vals (W, n), weights (W,) -> sum_w weights[w]*vals[w] as (n,) f32."""
+    return jnp.sum(vals.astype(f32) * weights.astype(f32)[:, None], axis=0)
+
+
 def threshold_ref(x: jax.Array, tau: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(masked values, per-row kept counts (int32))."""
     keep = jnp.abs(x) >= tau

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_ROWS = 64
+BLOCK_ROWS = 8  # small blocks keep per-bucket pad overhead low (8 KiB tiles)
 LANES = 128
 f32 = jnp.float32
 

@@ -1,0 +1,132 @@
+"""Compressed-domain reduction kernels: unpack+accumulate fused in one pass.
+
+The collective epilogue for compressed wire formats.  After an all-gather of
+*packed* payloads — 1-bit sign bitmaps (`sign_pack`), 2-bit ternary codes
+(`tern_pack_3d`), or raw int8 quantizer codes — these kernels decode each
+worker's payload and accumulate the per-worker weighted sum in f32 without
+ever materializing the (W, n) dense decode in HBM.  The worker weight input
+carries the whole per-worker epilogue: participation mask (churn `alive`),
+ternary scale, or qsgd `norm/levels`, so the kernels stay linear-algebra-free
+and the callers (``repro.core.aggregate``) keep the denominator logic.
+
+Layouts are lane-interleaved (last dim 128) to match the pack kernels:
+element ``e`` of the flat vector lives at ``(row, slot, lane) =
+(e // (S*128), (e // 128) % S, e % 128)`` with S=8 for sign bits, S=4 for
+ternary 2-bit slots.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8  # byte-rows per grid step; small blocks keep bucket padding low
+LANES = 128
+f32 = jnp.float32
+
+
+def _vote_kernel(p_ref, w_ref, o_ref):
+    # p (W, R, 128) uint8 bitmaps, w (W, 128) f32 -> o (R, 8, 128) f32
+    # vote sums: sum_w w[w] * (2*bit - 1)
+    p = p_ref[...]
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 1, 8, 1)
+    bits = (p[:, :, None, :] >> shifts) & 1  # (W, R, 8, 128)
+    signs = bits.astype(f32) * 2.0 - 1.0
+    w = w_ref[...].reshape(-1, 1, 1, LANES)
+    o_ref[...] = jnp.sum(signs * w, axis=0)
+
+
+def sign_vote_3d(packed: jax.Array, weights: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """packed (W, rows, 128) uint8, weights (W, 128) f32 -> (rows, 8, 128)
+    f32 weighted vote sums."""
+    n_w, rows, _ = packed.shape
+    return pl.pallas_call(
+        _vote_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, 8, LANES), f32),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((n_w, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_w, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, 8, LANES), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(packed, weights)
+
+
+def _tern_pack_kernel(t_ref, o_ref):
+    # t (R, 4, 128) int8 in {-1, 0, +1} -> (R, 128) uint8, 2 bits/slot:
+    # 0 = zero, 1 = +1, 3 = -1 (bit0 = nonzero, bit1 = negative)
+    t = t_ref[...]
+    nz = (t != 0).astype(jnp.uint8)
+    neg = (t < 0).astype(jnp.uint8)
+    code = nz | (neg << 1)
+    shifts = (2 * jnp.arange(4, dtype=jnp.uint8)).reshape(1, 4, 1)
+    o_ref[...] = jnp.sum(code << shifts, axis=1, dtype=jnp.uint8)
+
+
+def tern_pack_3d(t3: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """t3 (rows, 4, 128) int8 -> (rows, 128) uint8 (2-bit wire codes)."""
+    rows = t3.shape[0]
+    return pl.pallas_call(
+        _tern_pack_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, 4, LANES), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=interpret,
+    )(t3)
+
+
+def _tern_acc_kernel(p_ref, w_ref, o_ref):
+    # p (W, R, 128) uint8 2-bit codes, w (W, 128) f32 -> (R, 4, 128) f32
+    p = p_ref[...]
+    shifts = (2 * jnp.arange(4, dtype=jnp.uint8)).reshape(1, 1, 4, 1)
+    slot = (p[:, :, None, :] >> shifts) & 3  # (W, R, 4, 128)
+    val = (slot == 1).astype(f32) - (slot == 3).astype(f32)
+    w = w_ref[...].reshape(-1, 1, 1, LANES)
+    o_ref[...] = jnp.sum(val * w, axis=0)
+
+
+def tern_acc_3d(packed: jax.Array, weights: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """packed (W, rows, 128) uint8, weights (W, 128) f32 -> (rows, 4, 128)
+    f32 = sum_w weights[w] * decode(packed[w])."""
+    n_w, rows, _ = packed.shape
+    return pl.pallas_call(
+        _tern_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, 4, LANES), f32),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((n_w, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_w, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, 4, LANES), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(packed, weights)
+
+
+def _int8_acc_kernel(c_ref, w_ref, o_ref):
+    # c (W, R, 128) int8 codes, w (W, 128) f32 -> (R, 128) f32 widening sum
+    c = c_ref[...].astype(f32)
+    w = w_ref[...].reshape(-1, 1, LANES)
+    o_ref[...] = jnp.sum(c * w, axis=0)
+
+
+def int8_acc_3d(codes: jax.Array, weights: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """codes (W, rows, 128) int8, weights (W, 128) f32 -> (rows, 128) f32
+    = sum_w weights[w] * codes[w] (f32-widening accumulate)."""
+    n_w, rows, _ = codes.shape
+    return pl.pallas_call(
+        _int8_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), f32),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((n_w, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_w, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=interpret,
+    )(codes, weights)

@@ -667,6 +667,9 @@ def _compile_bundle(
             # holds open around that call
             jax.eval_shape(lambda *a: fn(*a), *args)
         wire[name] = wlog.by_tag()
+        # per-encoding breakdown rides along under "<name>_formats" so wire
+        # columns can show WHAT the bytes were (f32 vs int8 vs packed1/2)
+        wire[name + "_formats"] = wlog.by_wire_format()
 
     _trace_wire("train", raw_train, state_abstract, batch_abs, lr_abs, knobs0)
     _trace_wire("inner", raw_inner, state_abstract, batch_abs, lr_abs, knobs0)

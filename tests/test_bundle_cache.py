@@ -174,7 +174,8 @@ def test_wire_artifact_present_on_cached_bundles():
                       momentum_sgd(0.0), shape)
     st = bundle_cache_stats()
     assert (st.builds, st.hits) == (1, 1)
-    assert set(b1.wire) == {"train", "inner", "sync"}
+    assert set(b1.wire) == {"train", "train_formats", "inner",
+                            "inner_formats", "sync", "sync_formats"}
     assert b2.wire == b1.wire  # same artifact object for the class
     assert "grad_agg" in b1.wire["train"]
     assert "grad_agg" not in b1.wire["inner"]  # inner step never aggregates
