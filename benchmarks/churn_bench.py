@@ -19,6 +19,22 @@ batched scan engine.  Asserts:
 Trainer leg (needs >=2 devices, else a skip row): {qsgd, adaptive_qsgd,
 size_adaptive} x {0%, 30%} on the real mesh — builds at most one bundle per
 shape class and every loss stays finite.
+
+Rejoin leg (PR 8): the drop-and-rejoin protocol priced and measured on all
+three substrates.
+
+* engine: local-SGD cells under a windowed 30% dropout, ``reset`` vs
+  ``pull_avg`` — both converge, the policy is structural (one compile per
+  policy), and pull_avg's live-set download is charged in the bit ledger;
+* timeline: predicted vs measured resync overhead (event count, seconds,
+  bytes) for both policies — the analytic event-count estimate stays within
+  2x of one sampled event stream;
+* trainer (needs >=2 devices): the three formerly-rejected combos —
+  PowerSGD under churn, CHOCO gossip under churn x both rejoin policies,
+  and masked runtime parameter averaging (local sync) x both — run
+  end-to-end with finite losses, at most one build per shape class, and
+  each churn cell reports its live fraction, alive-weighted wire figure
+  and the separately-booked resync channel.
 """
 
 from __future__ import annotations
@@ -174,11 +190,174 @@ def _trainer_leg() -> tuple[dict, list[Row]]:
     return record, rows
 
 
+def _rejoin_engine_leg() -> tuple[dict, list[Row]]:
+    """reset vs pull_avg on the scan engine: windowed dropout over local-SGD
+    cells — both policies converge, the policy is structural (one compile
+    each), and the pull_avg download shows up in the bit ledger."""
+    from repro.core.simulate import engine_cache_clear, engine_cache_stats
+    from repro.experiments.runner import run_scenarios
+
+    steps = 200
+    base = dict(sync="local", local_steps=5, n_workers=8, steps=steps,
+                lr=0.05, compressor="qsgd", compressor_kwargs={"levels": 16},
+                error_feedback=True, churn=True, dropout_rate=0.3,
+                churn_start=steps // 4, churn_end=3 * steps // 4, seed=0)
+    cells = [Scenario(**base, rejoin_policy="reset"),
+             Scenario(**base, rejoin_policy="pull_avg")]
+    engine_cache_clear()
+    t0 = time.perf_counter()
+    results = run_scenarios(cells, "training", replicas=3)
+    sweep_s = time.perf_counter() - t0
+    st = engine_cache_stats()
+    # rejoin_policy is STRUCTURAL: one compile per policy, none per rate
+    assert st.compiles == 2, st
+
+    out = {}
+    for r in results:
+        loss = r.series["loss"].mean(axis=0)
+        assert np.isfinite(loss).all(), r.tag
+        assert loss[-1] < loss[0], (r.tag, float(loss[0]), float(loss[-1]))
+        out[r.scenario.rejoin_policy] = {
+            "tag": r.tag,
+            "final_loss": float(loss[-1]),
+            "gbits": r.measured["gbits"],
+        }
+    # the pull_avg download is charged: more bits than the alpha-only reset
+    assert out["pull_avg"]["gbits"] > out["reset"]["gbits"], out
+
+    record = {"steps": steps, "dropout": 0.3,
+              "window": [steps // 4, 3 * steps // 4],
+              "compiles": st.compiles, "sweep_wall_clock_s": sweep_s,
+              "policies": out}
+    rows = [Row("churn/rejoin_engine", sweep_s * 1e6,
+                "reset={:.4g} pull_avg={:.4g} (final loss, 2 compiles)".format(
+                    out["reset"]["final_loss"], out["pull_avg"]["final_loss"]))]
+    return record, rows
+
+
+def _rejoin_timeline_leg() -> tuple[dict, list[Row]]:
+    """Predicted vs measured resync overhead on the timeline event stream."""
+    from repro.experiments.runner import predict, run_scenario
+
+    base = dict(sync="bsp", n_workers=8, steps=120, compute_time=0.01,
+                churn=True, dropout_rate=0.2, churn_start=20, churn_end=90,
+                seed=0)
+    record = {}
+    for policy in ("reset", "pull_avg"):
+        s = Scenario(**base, rejoin_policy=policy)
+        r = run_scenario(s, "timeline")
+        p = predict(s, "timeline")
+        m = r.measured
+        assert m["resync_events"] > 0, policy
+        # one sampled stream vs the closed-form expectation: within 2x
+        assert 0.5 < p["resync_events"] / m["resync_events"] < 2.0, (p, m)
+        record[policy] = {
+            "measured": {k: m[k] for k in
+                         ("resync_events", "resync_seconds", "resync_bytes")},
+            "predicted": {k: p[k] for k in
+                          ("resync_events", "resync_seconds", "resync_bytes")},
+        }
+    assert record["reset"]["measured"]["resync_bytes"] == 0.0
+    assert (record["pull_avg"]["measured"]["resync_seconds"]
+            > record["reset"]["measured"]["resync_seconds"])
+
+    rows = [Row("churn/rejoin_timeline", 0.0,
+                "events measured={:.0f} predicted={:.1f}".format(
+                    record["pull_avg"]["measured"]["resync_events"],
+                    record["pull_avg"]["predicted"]["resync_events"]))]
+    return record, rows
+
+
+def _rejoin_trainer_leg() -> tuple[dict, list[Row]]:
+    """The three formerly-rejected trainer combos under windowed churn."""
+    import jax
+
+    from repro.experiments.trainer_substrate import run_trainer_sweep, trainer_shape_key
+    from repro.train.steps import bundle_cache_clear, bundle_cache_stats
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return {"skipped": "needs >=2 devices"}, [
+            Row("churn/rejoin_trainer", 0.0,
+                "skipped: needs >=2 devices (set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=4)")]
+
+    window = dict(churn=True, dropout_rate=0.3, churn_start=2, churn_end=8,
+                  seed=0)
+    cells = [
+        # PowerSGD: masked factor psums (policy has no pull on bsp — reset)
+        Scenario(sync="bsp", n_workers=4, steps=12, lr=0.05,
+                 compressor="powersgd", compressor_kwargs={"rank": 2},
+                 error_feedback=True, **window),
+    ]
+    for policy in ("reset", "pull_avg"):
+        # CHOCO gossip: mirror freeze + rejoin resync channel
+        cells.append(Scenario(arch="gossip", gossip_compress="choco",
+                              n_workers=4, steps=12, lr=0.05,
+                              compressor="qsgd",
+                              compressor_kwargs={"levels": 16},
+                              rejoin_policy=policy, **window))
+        # masked runtime parameter averaging over the local-SGD sync round
+        cells.append(Scenario(sync="local", local_steps=2, n_workers=4,
+                              steps=12, lr=0.05, compressor="qsgd",
+                              compressor_kwargs={"levels": 16},
+                              error_feedback=True, rejoin_policy=policy,
+                              **window))
+
+    dp = min(4, ndev)
+    classes = {trainer_shape_key(s, data_par=dp) for s in cells}
+    bundle_cache_clear()
+    t0 = time.perf_counter()
+    results, skipped = run_trainer_sweep(cells, data_par=dp)
+    sweep_s = time.perf_counter() - t0
+    assert not skipped, skipped
+    st = bundle_cache_stats()
+    assert st.builds <= len(classes), (st, len(classes))
+
+    cells_out = []
+    for r in results:
+        assert np.isfinite(r.series["loss_full"]).all(), r.tag
+        m = r.measured
+        for key in ("live_fraction", "wire_kb_per_step_alive",
+                    "wire_resync_kb_per_step"):
+            assert key in m, (r.tag, key)
+        cells_out.append({"tag": r.tag, "final_loss": m["final_loss"],
+                          "live_fraction": m["live_fraction"],
+                          "wire_kb_per_step": m["wire_kb_per_step"],
+                          "wire_kb_per_step_alive": m["wire_kb_per_step_alive"],
+                          "wire_resync_kb_per_step": m["wire_resync_kb_per_step"]})
+    # the dense pull shows on the wire: each pull_avg cell's resync channel
+    # books at least as many bytes as its reset twin's
+    by_tag = {c["tag"]: c for c in cells_out}
+    for pull_tag, c in by_tag.items():
+        if "+rejoin=pull_avg" not in pull_tag:
+            continue
+        reset_tag = pull_tag.replace("+rejoin=pull_avg", "")
+        assert c["wire_resync_kb_per_step"] >= \
+            by_tag[reset_tag]["wire_resync_kb_per_step"], (pull_tag, by_tag)
+
+    record = {"n_cells": len(cells), "n_shape_classes": len(classes),
+              "builds": st.builds, "n_devices": ndev, "data_par": dp,
+              "sweep_wall_clock_s": sweep_s, "cells": cells_out}
+    rows = [Row("churn/rejoin_trainer", sweep_s * 1e6,
+                f"{len(cells)} formerly-rejected cells -> "
+                f"{len(classes)} classes, {st.builds} builds")]
+    return record, rows
+
+
 def run() -> list[Row]:
     engine_rec, rows = _engine_leg()
     trainer_rec, trows = _trainer_leg()
     rows += trows
+    rj_engine, rrows = _rejoin_engine_leg()
+    rows += rrows
+    rj_timeline, trows2 = _rejoin_timeline_leg()
+    rows += trows2
+    rj_trainer, trows3 = _rejoin_trainer_leg()
+    rows += trows3
     with open(BENCH_PATH, "w") as f:
-        json.dump({"engine": engine_rec, "trainer": trainer_rec}, f, indent=2)
+        json.dump({"engine": engine_rec, "trainer": trainer_rec,
+                   "rejoin": {"engine": rj_engine, "timeline": rj_timeline,
+                              "trainer": rj_trainer}}, f, indent=2)
     rows.append(Row("churn/claims_validated", 0.0, True))
     return rows

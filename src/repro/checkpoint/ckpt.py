@@ -34,16 +34,32 @@ def save(path: str, tree: Any, *, step: int = 0, extra: dict | None = None) -> N
         json.dump(manifest, f, indent=2)
 
 
-def restore(path: str, like: Any, shardings: Any | None = None) -> tuple[Any, int]:
-    """Restore into the structure of ``like`` (abstract or concrete tree)."""
+def restore(path: str, like: Any, shardings: Any | None = None, *,
+            partial: bool = False) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (abstract or concrete tree).
+
+    ``partial=True`` permits the checkpoint to carry keys the restore tree
+    does not ask for (they are ignored) — the churn-aware rejoin path uses
+    this to pull parameters/optimizer state out of a checkpoint whose comm
+    state is stale by construction.  Keys the restore tree asks for must
+    always exist in the checkpoint.
+    """
     with np.load(os.path.join(path, "arrays.npz")) as z:
         host = {k: z[k] for k in z.files}
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     flat_like = flatten_with_paths(like)
-    if sorted(flat_like.keys()) != manifest["keys"]:
-        missing = set(manifest["keys"]) ^ set(flat_like.keys())
-        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)[:8]}...")
+    ckpt_keys = set(manifest["keys"])
+    tree_keys = set(flat_like.keys())
+    missing_from_tree = sorted(ckpt_keys - tree_keys)  # saved, but not asked for
+    absent_from_ckpt = sorted(tree_keys - ckpt_keys)  # asked for, never saved
+    if absent_from_ckpt or (missing_from_tree and not partial):
+        raise ValueError(
+            f"checkpoint/tree key mismatch restoring {path!r}: "
+            f"{len(missing_from_tree)} checkpoint key(s) absent from the "
+            f"restore tree {missing_from_tree}; "
+            f"{len(absent_from_ckpt)} restore-tree key(s) absent from the "
+            f"checkpoint {absent_from_ckpt}")
     leaves_like, treedef = jax.tree.flatten(like)
     # rebuild in tree order
     path_order = list(flatten_with_paths(like).keys())

@@ -129,6 +129,9 @@ def make_bucket_plan(comm: CommConfig, grads_abstract: Any) -> BucketPlan:
 
 def init_comm_state(comm: CommConfig, plan: BucketPlan) -> dict[str, Any]:
     state: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if getattr(comm, "churn", False) or getattr(comm, "dropout_rate", 0.0) > 0:
+        # previous round's participation bit (per shard) — rejoin detection
+        state["alive_prev"] = jnp.ones((1,), f32)
     if comm.error_feedback:
         state["ef"] = [jnp.zeros((b.size,), f32) for b in plan.buckets]
     if comm.momentum_correction:
@@ -168,18 +171,29 @@ def _scatter_buckets(plan: BucketPlan, bucket_vals: list[jax.Array], leaves_like
     return new
 
 
-def _powersgd_aggregate(compressor, a, q_flat, axes, n_workers):
+def _powersgd_aggregate(compressor, a, q_flat, axes, n_workers,
+                        alive=None, n_eff=None):
     """PowerSGD round: psum-compatible low-rank factors (see
-    compression/powersgd.py). Returns (agg, new_q_flat)."""
+    compression/powersgd.py). Returns (agg, new_q_flat).
+
+    Under churn (``alive``/``n_eff``) a dead worker's ``M`` contribution is
+    zeroed before both factor psums and the denominators renormalize over
+    the live set — the factor iteration runs on live gradients only.  The
+    aggregated ``Qn`` is identical on every shard, so a rejoiner's ``Q``
+    is re-warm-started from the live representative the moment it re-enters
+    (its stale factor is overwritten by this round's live-set ``Qn``)."""
     from repro.core.compression.powersgd import orthonormalize, shape2d
 
     n = a.size
     aa, bb = shape2d(n)
     M = jnp.pad(a, (0, aa * bb - n)).reshape(aa, bb)
+    if alive is not None:
+        M = M * alive
+    denom = n_workers if n_eff is None else n_eff
     Q = q_flat.reshape(bb, compressor.rank)
-    P = comms.psum(M @ Q, axes) / n_workers
+    P = comms.psum(M @ Q, axes) / denom
     P = orthonormalize(P)
-    Qn = comms.psum(M.T @ P, axes) / n_workers
+    Qn = comms.psum(M.T @ P, axes) / denom
     agg = (P @ Qn.T).reshape(-1)[:n]
     return agg, Qn.reshape(-1)
 
@@ -364,10 +378,8 @@ def aggregate_buckets(
     # the per-worker key (probability/window traced via knobs); the live
     # count is one scalar psum — a real liveness round on the wire.  One
     # mask covers every bucket of the round.
-    alive = n_eff = None
+    alive = n_eff = rejoined = None
     if getattr(comm, "churn", False) or getattr(comm, "dropout_rate", 0.0) > 0:
-        if plan_uses_powersgd(plan):
-            raise ValueError("powersgd is unsupported under churn")
         if knobs is not None:
             drop, cs, ce = knobs["dropout"], knobs["churn_start"], knobs["churn_end"]
         else:
@@ -389,6 +401,21 @@ def aggregate_buckets(
 
     if "psgd_q" in state:
         state["psgd_q"] = list(state["psgd_q"])
+
+    if alive is not None and "alive_prev" in state:
+        # rejoin protocol: a shard alive this round but masked out last
+        # round resets its compressor state — the frozen EF residual /
+        # momentum buffer describe a model that has since moved on.  The
+        # reset is a jnp.where on a rejoined bit that is identically 0 at
+        # dropout 0 (alive_prev inits to 1), preserving the bitwise
+        # churn-free equivalence; powersgd Q needs no reset because the
+        # psum'd live-set Qn overwrites every shard's factor each round.
+        rejoined = alive * (1.0 - state["alive_prev"].reshape(()))
+        for k in ("ef", "u"):
+            if k in state:
+                state[k] = [jnp.where(rejoined > 0, jnp.zeros_like(e), e)
+                            for e in state[k]]
+        state["alive_prev"] = alive.reshape(1)
 
     wire_fmt = getattr(comm, "wire_format", "dense")
     out_bufs = []
@@ -420,7 +447,8 @@ def aggregate_buckets(
                                       knobs=knobs, alive=alive)
             if getattr(compressor, "reduce_mode", "") == "powersgd":
                 agg, q_new = _powersgd_aggregate(
-                    compressor, a, state["psgd_q"][i], axes, n_workers
+                    compressor, a, state["psgd_q"][i], axes, n_workers,
+                    alive=alive, n_eff=n_eff,
                 )
                 state["psgd_q"][i] = q_new
                 self_hat = agg  # per-worker EF vs the GLOBAL approximation

@@ -90,12 +90,17 @@ class CommLog:
             out[key] = out.get(key, 0.0) + r.wire_bytes * r.mult
         return out
 
-    def by_wire_format(self, *, payload: bool = False) -> dict[str, float]:
+    def by_wire_format(self, *, payload: bool = False,
+                       exclude_tags: tuple[str, ...] = ()) -> dict[str, float]:
         """Bytes per on-wire encoding — wire bytes by default, raw local
         payload bytes with ``payload=True`` (mesh-size independent, what the
-        32x packed-vs-dense claims are stated in)."""
+        32x packed-vs-dense claims are stated in).  ``exclude_tags`` drops
+        whole channels (e.g. the dense ``churn_resync`` rejoin channel) so
+        a breakdown can describe the payload wire alone."""
         out: dict[str, float] = {}
         for r in self.records:
+            if r.tag in exclude_tags:
+                continue
             b = r.payload_bytes if payload else r.wire_bytes
             out[r.wire_format] = out.get(r.wire_format, 0.0) + b * r.mult
         return out

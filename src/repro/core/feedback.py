@@ -96,7 +96,11 @@ def post_compress(
 ) -> None:
     """Error accumulation update e = a - C(a) (§IX-A, eq. block).  A
     masked-out shard (``alive == 0``) sent nothing, so its residual stays
-    frozen until it rejoins."""
+    frozen until it rejoins.  This is the *freeze* half of the
+    freeze→resync rejoin protocol — the *resync* half (dropping the stale
+    residual and momentum row on the shard's rejoin step) lives with the
+    rejoin detection in :func:`repro.core.aggregate.aggregate_buckets`,
+    which zeroes ``state["ef"]``/``state["u"]`` before the round."""
     if comm.error_feedback:
         new = g_in - g_hat
         if alive is not None:

@@ -69,6 +69,16 @@ class TimelineCfg:
     # nominal; empty = homogeneous) and the straggler draw family
     worker_speeds: tuple = ()
     straggler_dist: str = "lognormal"  # lognormal | uniform | none
+    # churn as a timeline EVENT STREAM: per-iteration Bernoulli offline
+    # draws inside the [churn_start, churn_end) window produce drop/rejoin
+    # transitions; every rejoin charges a resync cost through the
+    # alpha-beta model ("pull_avg": a full model pull, alpha + beta*N and
+    # N wire bytes; "reset": a membership handshake, alpha only).
+    dropout_rate: float = 0.0  # per-iteration P(worker offline)
+    worker_dropout: tuple = ()  # per-worker override (length n_workers)
+    churn_start: int = 0  # first iteration (inclusive) dropout applies
+    churn_end: int = -1  # last iteration (exclusive); -1 = until the end
+    rejoin_policy: str = "reset"  # reset | pull_avg
 
 
 @dataclass
@@ -79,6 +89,11 @@ class TimelineResult:
     mean_staleness: float
     comm_frac: float
     bytes_per_worker: float = 0.0  # wire bytes each worker moved (up+down)
+    # churn event accounting: rejoin transitions observed and the resync
+    # cost they charged (seconds on the rejoiner's clock, bytes on the wire)
+    resync_events: int = 0
+    resync_seconds: float = 0.0
+    resync_bytes: float = 0.0
 
     def row(self) -> dict:
         return {
@@ -87,6 +102,9 @@ class TimelineResult:
             "mean_staleness": self.mean_staleness,
             "comm_frac": self.comm_frac,
             "bytes_per_worker": self.bytes_per_worker,
+            "resync_events": self.resync_events,
+            "resync_seconds": self.resync_seconds,
+            "resync_bytes": self.resync_bytes,
         }
 
 
@@ -132,6 +150,43 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
         if len(cfg.worker_speeds) != n:
             raise ValueError("worker_speeds length must equal n_workers")
         compute /= np.asarray(cfg.worker_speeds, dtype=float)[:, None]
+
+    # churn event stream: Bernoulli offline draws inside the window become
+    # drop/rejoin TRANSITIONS; a masked iteration contributes no compute and
+    # moves no bytes, and every rejoin charges the policy's resync cost on
+    # the rejoiner's clock.  Drawn after the compute draw so churn-free
+    # cells reproduce the exact pre-churn trajectories.
+    churn_on = bool(cfg.dropout_rate > 0 or any(cfg.worker_dropout))
+    alive = np.ones((n, T), dtype=bool)
+    rejoin = np.zeros((n, T), dtype=bool)
+    resync_t = resync_b = 0.0
+    if churn_on:
+        if cfg.rejoin_policy not in ("reset", "pull_avg"):
+            raise ValueError(
+                f"unknown rejoin_policy {cfg.rejoin_policy!r} "
+                "(expected 'reset' or 'pull_avg')")
+        rates = (np.asarray(cfg.worker_dropout, dtype=float)
+                 if cfg.worker_dropout else np.full(n, cfg.dropout_rate))
+        if rates.shape[0] != n:
+            raise ValueError("worker_dropout length must equal n_workers")
+        start = min(max(int(cfg.churn_start), 0), T)
+        end = T if cfg.churn_end < 0 else min(int(cfg.churn_end), T)
+        if end > start:
+            u = rng.uniform(size=(n, end - start))
+            alive[:, start:end] = u >= rates[:, None]
+        prev = np.concatenate([np.ones((n, 1), bool), alive[:, :-1]], axis=1)
+        rejoin = alive & ~prev
+        if cfg.rejoin_policy == "pull_avg":
+            # a full model pull over the link
+            resync_t = cfg.alpha + cfg.beta * cfg.msg_bytes
+            resync_b = cfg.msg_bytes
+        else:
+            resync_t = cfg.alpha  # membership handshake only
+        compute = compute * alive + resync_t * rejoin
+    resync_events = int(rejoin.sum())
+    resync_seconds_total = resync_t * resync_events
+    resync_bytes_total = resync_b * resync_events
+
     finish = np.zeros((n, T))
     t = np.zeros(n)  # current wall-clock per worker
     done = np.zeros(n, dtype=int)  # iterations completed
@@ -149,7 +204,9 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
         finish[:] = t_end[None, :]
         t_prev = np.concatenate([[0.0], t_end[:-1]])
         comm_total = (t_end[None, :] - (t_prev[None, :] + compute)).sum(axis=1)
-        bytes_per_worker = T * round_bytes
+        # masked workers move no payload that round; resync pulls are extra
+        bytes_per_worker = (round_bytes * alive.sum() / n
+                            + resync_bytes_total / n)
         stale_samples = [0.0]
     elif cfg.sync == "local":
         # Vectorized per H-step segment: workers run free inside a segment
@@ -168,10 +225,13 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
             fin[:, :, -1] = sync_end[None, :]
             finish[:, : K * H] = fin.reshape(n, K * H)
             comm_total = (sync_end[None, :] - (seg_start[None, :] + seg_tot)).sum(axis=1)
-            bytes_per_worker = K * round_bytes
+            # a worker masked at the sync point skips that round's exchange
+            part = alive[:, H - 1 : K * H : H]  # (n, K) at-sync participation
+            bytes_per_worker = round_bytes * part.sum() / n
             seg_end = sync_end[-1]
         if rem:  # trailing partial segment never reaches a sync point
             finish[:, K * H :] = seg_end + compute[:, K * H :].cumsum(axis=1)
+        bytes_per_worker += resync_bytes_total / n
         stale_samples = [0.0]
     else:  # ssp / asp: event-driven per worker
         # each worker proceeds; SSP blocks if ahead of slowest by > s
@@ -188,9 +248,11 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
                     wait = max(0.0, t[j] + compute[j, min(done[j], T - 1)] - t[i])
                     t[i] += wait
             start = t[i]
-            t[i] += compute[i, done[i]] + c_one
-            comm_total[i] += c_one
-            bytes_per_worker += round_bytes / n  # per-worker average
+            al = float(alive[i, done[i]])  # masked iter: no compute, no wire
+            t[i] += compute[i, done[i]] + c_one * al
+            comm_total[i] += c_one * al
+            bytes_per_worker += (round_bytes * al
+                                 + resync_b * rejoin[i, done[i]]) / n
             finish[i, done[i]] = t[i]
             stale_samples.append(done[i] - done.min())
             done[i] += 1
@@ -205,6 +267,9 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
         mean_staleness=float(np.mean(stale_samples)),
         comm_frac=float(comm_total.sum() / (makespan * n)),
         bytes_per_worker=float(bytes_per_worker),
+        resync_events=resync_events,
+        resync_seconds=float(resync_seconds_total),
+        resync_bytes=float(resync_bytes_total),
     )
 
 
@@ -233,6 +298,12 @@ class SimCfg:
     worker_dropout: tuple = ()  # per-worker override (length n_workers)
     churn_start: int = 0  # first step (inclusive) dropout applies
     churn_end: int = -1  # last step (exclusive); -1 = until the end
+    #: rejoin protocol — "reset" resets compressor state (EF residual) on
+    #: rejoin and lets parameters re-enter via the scheme's own averaging;
+    #: "pull_avg" additionally pulls the live-set parameter average at the
+    #: rejoin step (local/gossip schemes, where a rejoiner is actually
+    #: stale), charging a dense model download per rejoin event.
+    rejoin_policy: str = "reset"
 
 
 class Problem(tuple):
@@ -360,6 +431,9 @@ class EngineSpec:
     delay_slots: int = 1  # delay-line depth >= max staleness + 1 in the class
     traced_noise: bool = False  # grad noise passed as a traced CellParams value
     churn: bool = False  # participation mask carried through the scan
+    #: "reset" | "pull_avg" — structural (the pull program differs);
+    #: normalized to "reset" when churn is off
+    rejoin_policy: str = "reset"
 
 
 @dataclass
@@ -422,6 +496,10 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
     churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout))
     if cfg.worker_dropout and len(cfg.worker_dropout) != cfg.n_workers:
         raise ValueError("worker_dropout length must equal n_workers")
+    if cfg.rejoin_policy not in ("reset", "pull_avg"):
+        raise ValueError(
+            f"unknown rejoin_policy {cfg.rejoin_policy!r} "
+            "(expected 'reset' or 'pull_avg')")
     spec = EngineSpec(
         sync=cfg.sync,
         n_workers=cfg.n_workers,
@@ -431,6 +509,7 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         delay_slots=cfg.staleness + 1 if cfg.sync in ("ssp", "asp") else 1,
         traced_noise=grad_noise is not None,
         churn=churn,
+        rejoin_policy=(cfg.rejoin_policy if churn else "reset"),
     )
     dropout = (tuple(float(p) for p in cfg.worker_dropout)
                if cfg.worker_dropout
@@ -456,9 +535,10 @@ def shape_class_key(cfg: SimCfg) -> tuple:
     resolved to the class maximum after grouping."""
     from repro.core.compression.base import shape_fingerprint
 
+    churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout))
     return (cfg.sync, cfg.n_workers, cfg.steps, bool(cfg.error_feedback),
-            shape_fingerprint(cfg.compressor),
-            bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout)))
+            shape_fingerprint(cfg.compressor), churn,
+            cfg.rejoin_policy if churn else "reset")
 
 
 def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
@@ -468,7 +548,9 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
     baked into the trace).  Workers are vmapped inside the step; the caller
     vmaps replica seeds and (for a class batch) cells — with per-cell
     ``data``, cells differing only in problem seed share the program.
-    The carry is ``(X, ef, delay_buf, key, total_bits)``; wire bits are
+    The carry is ``(X, ef, delay_buf, key, total_bits)`` (plus the previous
+    round's participation mask under churn, for rejoin detection); wire
+    bits are
     accumulated in-scan from the compressor roundtrip — data-dependent
     (threshold-style) payloads charge their *measured* size."""
     from repro.core.compression.base import roundtrip_bits, roundtrip_bits_ef
@@ -519,7 +601,10 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
             return out, ef, wb
 
         def step(carry, t):
-            X, ef, delay_buf, key, total_bits = carry
+            if spec.churn:
+                X, ef, delay_buf, key, total_bits, m_prev = carry
+            else:
+                X, ef, delay_buf, key, total_bits = carry
             key, k1, k2 = jax.random.split(key, 3)
             gkeys = jax.random.split(k1, n)
             ckeys = jax.random.split(k2, n)
@@ -533,6 +618,29 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                 in_window = (tf >= p["churn_start"]) & (tf < p["churn_end"])
                 m = jnp.where(in_window & (u < p["dropout"]), 0.0, 1.0)
                 n_alive = jnp.maximum(jnp.sum(m), 1.0)
+                # rejoin protocol: a worker alive now but masked last round
+                # resets its compressor state at the END of its rejoin round
+                # (the stale EF residual is garbage w.r.t. the moved model;
+                # it is dropped rather than carried — the reset merges into
+                # the post-compression freeze select below because ANY op
+                # inserted before the compression reductions re-fuses them
+                # and costs the bitwise dropout-0 equivalence).  Under
+                # pull_avg it also pulls the live-set parameter average
+                # where it is actually stale (local/gossip — PS schemes'
+                # global model makes rejoin implicit).  All selections are
+                # jnp.where on a rejoined bit that is identically 0 at
+                # dropout 0.
+                rejoined = m * (1.0 - m_prev)
+                if spec.rejoin_policy == "pull_avg" and sync in ("local", "gossip"):
+                    donors = m * m_prev  # live both rounds: not stale
+                    n_don = jnp.sum(donors)
+                    xpull = (jnp.sum(X * donors[:, None], axis=0)
+                             / jnp.maximum(n_don, 1.0))
+                    take = (rejoined[:, None] > 0) & (n_don > 0)
+                    X = jnp.where(take, xpull[None, :], X)
+                    # each pull is a dense model download (resync transfer)
+                    total_bits = total_bits + jnp.where(
+                        n_don > 0, jnp.sum(rejoined) * 32.0 * dim, 0.0)
             G = grad_all(X, gkeys)
 
             if sync == "gossip":
@@ -540,8 +648,10 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                 if spec.churn:
                     # dead rows are identity (frozen params), dead columns'
                     # weight folds into each live row's self-weight — rows
-                    # still sum to 1 and W stays symmetric
-                    ef = jnp.where(m[:, None] > 0, ef2, ef)
+                    # still sum to 1 and W stays symmetric; a rejoiner's
+                    # stale residual is dropped (carry-out zero)
+                    ef = jnp.where(rejoined[:, None] > 0, jnp.zeros_like(ef),
+                                   jnp.where(m[:, None] > 0, ef2, ef))
                     Weff = masked_mixing_matrix(W, m)
                     X = Weff @ (X - lr * Ghat * m[:, None])
                     total_bits = total_bits + jnp.sum(wb * m)
@@ -560,8 +670,13 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                     G_eff = G
                 Ghat, ef2, wb = apply_compression(ckeys, G_eff, ef)
                 # EF residuals of masked-out workers freeze: they neither
-                # sent nor accumulated this round
-                ef = jnp.where(m[:, None] > 0, ef2, ef) if spec.churn else ef2
+                # sent nor accumulated this round; a rejoiner drops its
+                # stale residual at the end of its rejoin round
+                if spec.churn:
+                    ef = jnp.where(rejoined[:, None] > 0, jnp.zeros_like(ef),
+                                   jnp.where(m[:, None] > 0, ef2, ef))
+                else:
+                    ef = ef2
                 if sync == "local":
                     if spec.churn:
                         X = X - lr * Ghat * m[:, None]
@@ -599,7 +714,10 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                 jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1)),
                 total_bits,
             )
-            return (X, ef, delay_buf, key, total_bits), out
+            carry = (X, ef, delay_buf, key, total_bits)
+            if spec.churn:
+                carry = carry + (m,)
+            return carry, out
 
         carry0 = (
             jnp.tile(x0[None], (n, 1)),
@@ -608,6 +726,8 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
             seed_key,
             jnp.zeros((), f32),
         )
+        if spec.churn:
+            carry0 = carry0 + (jnp.ones((n,), f32),)
         (Xf, *_), (losses, cons, bits) = jax.lax.scan(
             step, carry0, jnp.arange(spec.steps)
         )

@@ -51,13 +51,36 @@ def _is_sync_step(step: int, H: int) -> bool:
     return H > 0 and (step + 1) % H == 0
 
 
-def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla") -> Any:
-    """Model averaging for Local SGD (Eq. 9, sync branch)."""
+def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla",
+                   alive: Any = None, donor: Any = None) -> Any:
+    """Model averaging for Local SGD (Eq. 9, sync branch).
+
+    ``alive=None`` is the churn-free path (bitwise unchanged).  With churn,
+    ``alive`` is this shard's traced participation bit for the sync round:
+    the average is taken over the live set only, dead shards keep their
+    parameters frozen, and live shards (including rejoiners) adopt the
+    live-set average.  ``donor`` optionally narrows whose parameters feed
+    the average — the ``pull_avg`` rejoin policy passes
+    ``donor = alive * alive_prev`` so a rejoiner with stale parameters
+    pulls the average without polluting it.  When nobody qualifies as a
+    donor the round degrades to a freeze (everyone keeps their params).
+    """
     n = 1
     for axn in axes:
         n *= compat_axis_size(axn)
     with comms.tag("local_sgd_sync"):
-        return jax.tree.map(
-            lambda p: (collectives.allreduce(p.astype(jnp.float32), axes, impl=impl) / n).astype(p.dtype),
-            params,
-        )
+        if alive is None:
+            return jax.tree.map(
+                lambda p: (collectives.allreduce(p.astype(jnp.float32), axes, impl=impl) / n).astype(p.dtype),
+                params,
+            )
+        w = alive if donor is None else donor
+        n_don = comms.psum(w, axes)
+        n_eff = jnp.maximum(n_don, 1.0)
+        adopt = (alive > 0) & (n_don > 0)
+
+        def _avg(p):
+            s = collectives.allreduce((p.astype(jnp.float32) * w), axes, impl=impl)
+            return jnp.where(adopt, (s / n_eff).astype(p.dtype), p)
+
+        return jax.tree.map(_avg, params)

@@ -102,6 +102,15 @@ class CommConfig:
     dropout_rate: float = 0.0  # per-round P(worker masked out)
     churn_start: int = 0  # first step (inclusive) dropout applies
     churn_end: int = -1  # last step (exclusive); -1 = until the end
+    #: how a worker re-enters after a masked round — STRUCTURAL:
+    #: "reset"    — compressor state (EF residual, momentum) resets on
+    #:              rejoin; parameters re-enter by the scheme's own
+    #:              mixing/averaging (a rejoiner contributes its frozen
+    #:              params to the next sync round);
+    #: "pull_avg" — additionally the rejoiner pulls the live-set parameter
+    #:              average (excluded as a donor while stale), charged as a
+    #:              resync transfer in the wire/timeline accounting.
+    rejoin_policy: str = "reset"
 
     def with_updates(self, **kw) -> "CommConfig":
         return dataclasses.replace(self, **kw)
@@ -146,6 +155,10 @@ class BundleSpec:
     overlap_staleness: int = 0
     #: participation mask carried through aggregation/mixing (values traced)
     churn: bool = False
+    #: rejoin protocol ("reset" | "pull_avg") — structural: "pull_avg" adds
+    #: the live-set pull / donor-exclusion program; normalized to "reset"
+    #: for churn-free cells so the inert knob never splits a class
+    rejoin_policy: str = "reset"
     #: "compressed" swaps the aggregation psum for gather+fused-kernel
     #: programs (normalized to "dense" for gossip, which mixes parameters)
     wire_format: str = "dense"
@@ -173,21 +186,12 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
             "pipelined overlap needs per-step aggregation (sync must be bsp, "
             f"got {comm.sync!r})")
     churn = bool(comm.churn or comm.dropout_rate > 0)
-    if churn:
-        if not 0.0 <= comm.dropout_rate < 1.0:
-            raise ValueError(f"dropout_rate must be in [0, 1), got {comm.dropout_rate!r}")
-        if comm.sync in ("local", "post_local") or comm.pod_local:
-            # the mask covers gradient aggregation and gossip mixing; the
-            # parameter-average sync round has no per-worker mask semantics
-            raise ValueError("churn is unsupported under parameter-averaging "
-                             "sync (local/post_local/pod_local) — the engine "
-                             "substrate covers local-SGD churn")
-        if comm.gossip_compress == "choco":
-            # the x_hat mirror a peer keeps for a dead neighbor diverges
-            raise ValueError("choco gossip compression is unsupported under churn")
-        if comm.compressor == "powersgd":
-            # factor psums have no per-worker mask semantics
-            raise ValueError("powersgd is unsupported under churn")
+    if comm.rejoin_policy not in ("reset", "pull_avg"):
+        raise ValueError(
+            f"unknown rejoin_policy {comm.rejoin_policy!r} "
+            "(expected 'reset' or 'pull_avg')")
+    if churn and not 0.0 <= comm.dropout_rate < 1.0:
+        raise ValueError(f"dropout_rate must be in [0, 1), got {comm.dropout_rate!r}")
     comp = get_compressor(comm.compressor, **comm.compressor_kwargs)
     if comm.wire_format not in ("dense", "compressed"):
         raise ValueError(f"unknown wire_format {comm.wire_format!r}")
@@ -230,6 +234,7 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
                            if comm.overlap == "pipelined"
                            and comm.aggregator != "gossip" else 0),
         churn=churn,
+        rejoin_policy=(comm.rejoin_policy if churn else "reset"),
         wire_format=wire_fmt,
     )
 

@@ -157,12 +157,32 @@ def predict(s: Scenario, substrate: str) -> dict[str, float]:
         # straggler-free alpha-beta estimate; the simulator adds the
         # straggler/congestion dynamics on top.
         iter_time = s.compute_time + comm_per_iter
-        return {
+        out = {
             "iter_time": iter_time,
             "throughput": s.n_workers / iter_time,
             "comm_frac": comm_per_iter / iter_time,
             "bytes_per_worker": _round_wire_bytes(s, eff) * rounds * s.steps,
         }
+        if s.churn:
+            # expected churn overhead from the Bernoulli event stream the
+            # timeline simulator draws: a rejoin at step t needs dead(t-1)
+            # AND alive(t) — p(1-p) per in-window step pair, plus one
+            # certain-alive transition when the window closes mid-run.
+            start = min(max(s.churn_start, 0), s.steps)
+            end = s.steps if s.churn_end == -1 else min(s.churn_end, s.steps)
+            w = max(0, end - start)
+            rates = (list(s.worker_dropout) if s.worker_dropout
+                     else [s.dropout_rate] * s.n_workers)
+            ev = sum(max(0, w - 1) * p * (1.0 - p)
+                     + (p if end < s.steps and w > 0 else 0.0)
+                     for p in rates)
+            per_event_s = (s.alpha + s.beta * eff
+                           if s.rejoin_policy == "pull_avg" else s.alpha)
+            per_event_b = eff if s.rejoin_policy == "pull_avg" else 0.0
+            out["resync_events"] = ev
+            out["resync_seconds"] = per_event_s * ev
+            out["resync_bytes"] = per_event_b * ev
+        return out
     if substrate == "training":
         dim_bits = 32.0 * (eff / s.msg_bytes)  # effective bits per element
         return {
@@ -254,6 +274,11 @@ def to_timeline_cfg(s: Scenario, seed: int | None = None) -> TimelineCfg:
         seed=s.seed if seed is None else seed,
         worker_speeds=s.worker_speeds,
         straggler_dist=s.straggler_dist,
+        dropout_rate=s.dropout_rate,
+        worker_dropout=s.worker_dropout,
+        churn_start=s.churn_start,
+        churn_end=s.churn_end,
+        rejoin_policy=s.rejoin_policy,
     )
 
 
@@ -277,6 +302,7 @@ def to_sim_cfg(s: Scenario, seed: int | None = None) -> SimCfg:
         worker_dropout=s.worker_dropout,
         churn_start=s.churn_start,
         churn_end=s.churn_end,
+        rejoin_policy=s.rejoin_policy,
     )
 
 

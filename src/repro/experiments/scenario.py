@@ -119,6 +119,16 @@ class Scenario:
     worker_dropout: tuple = ()
     churn_start: int = 0  # first step (inclusive) where dropout applies
     churn_end: int = -1  # last step (exclusive); -1 = until the end
+    #: how a worker re-enters after a masked-out round (STRUCTURAL: the two
+    #: policies compile different resync graphs; normalized to "reset" when
+    #: churn is off so it never splits churn-free classes):
+    #: * "reset"    — compressor state (EF residual, momentum, factors,
+    #:                mirrors) resets to zeros; parameters re-enter through
+    #:                the scheme's own mixing/averaging.
+    #: * "pull_avg" — additionally pulls the live-set parameter average
+    #:                (excluded as a donor while stale); the transfer is
+    #:                charged as a dense resync download.
+    rejoin_policy: str = "reset"
     #: per-worker compute-speed multipliers for the timeline substrate
     #: (length n_workers; 1.0 = nominal). Generalizes straggler_slowdown.
     worker_speeds: tuple = ()
@@ -185,6 +195,8 @@ class Scenario:
                 cell += f"+drop[{','.join(f'{p:g}' for p in self.worker_dropout)}]"
             else:
                 cell += f"+drop{self.dropout_rate * 100:g}%"
+            if self.rejoin_policy != "reset":
+                cell += f"+rejoin={self.rejoin_policy}"
         return cell
 
     def replace(self, **kw) -> "Scenario":
@@ -265,6 +277,9 @@ class Scenario:
                 v.append("churn_start must be >= 0")
             if self.churn_end != -1 and self.churn_end <= self.churn_start:
                 v.append("churn_end must be -1 (open) or > churn_start")
+        if self.rejoin_policy not in ("reset", "pull_avg"):
+            v.append(f"unknown rejoin_policy {self.rejoin_policy!r} "
+                     "(expected 'reset' or 'pull_avg')")
         if self.n_workers < 2:
             v.append("need >= 2 workers for a distributed scenario")
         if substrate is not None:
@@ -282,22 +297,18 @@ class Scenario:
                          "simulators model wire width analytically)")
             if substrate == "training" and self.arch == "gossip" and self.sync != "bsp":
                 v.append("gossip training is a synchronous mixing round (sync must be bsp)")
-            if self.churn and substrate not in ("training", "trainer"):
-                v.append("the churn mask is executable-only (training/trainer substrates)")
+            if self.churn and substrate not in ("training", "trainer", "timeline"):
+                v.append("the churn axis runs on the executable substrates "
+                         "(training/trainer) and the timeline event stream")
             if self.churn and substrate == "trainer":
-                if self.sync in ("local", "post_local") or self.pod_local:
-                    v.append("trainer churn masks gradient aggregation / gossip "
-                             "mixing; parameter-averaging sync rounds (local / "
-                             "post_local / pod_local) are engine-only under churn")
+                if self.pod_local:
+                    v.append("pod_local under churn is engine-only (the pod "
+                             "sync and the per-shard aggregation mask track "
+                             "liveness at different granularities)")
                 if self.worker_dropout:
-                    v.append("per-worker dropout vectors are engine-only (the "
-                             "trainer traces one scalar rate per cell)")
-                if self.gossip_compress == "choco":
-                    v.append("choco under churn is unsupported (the x-hat mirror "
-                             "of a dead peer diverges)")
-                if self.compressor == "powersgd":
-                    v.append("powersgd under churn is unsupported (factor psum "
-                             "has no per-worker mask)")
+                    v.append("per-worker dropout vectors are engine/timeline-"
+                             "only (the trainer traces one scalar rate per "
+                             "cell)")
             if self.worker_speeds and substrate not in (None, "timeline"):
                 v.append("worker_speeds shape the timeline substrate only")
         return v

@@ -45,6 +45,7 @@ def to_comm_config(s: Scenario):
         dropout_rate=s.dropout_rate,
         churn_start=s.churn_start,
         churn_end=s.churn_end,
+        rejoin_policy=s.rejoin_policy,
     )
 
 
@@ -120,6 +121,36 @@ def trainer_shape_key(s: Scenario, *, data_par: int | None = None,
 
     return (bundle_spec(to_comm_config(s)), data_par or s.n_workers, model_par,
             max(1, s.microbatch))
+
+
+def expected_live_fraction(s: Scenario) -> float:
+    """Expected fraction of worker-communication-rounds that actually put
+    payload on the wire under the cell's churn window: a masked worker's
+    round moves no compressed payload, so the wire artifact's structural
+    per-round bytes overcount a churn cell by exactly the expected dead
+    fraction.  1.0 for churn-free cells; per-worker rates average."""
+    if not s.churn or s.steps <= 0:
+        return 1.0
+    start = min(max(s.churn_start, 0), s.steps)
+    end = s.steps if s.churn_end == -1 else min(s.churn_end, s.steps)
+    w = max(0, end - start)
+    rates = (list(s.worker_dropout) if s.worker_dropout
+             else [s.dropout_rate] * max(1, s.n_workers))
+    p_mean = sum(rates) / len(rates)
+    return 1.0 - p_mean * w / s.steps
+
+
+def trainer_wire_resync_per_step(s: Scenario,
+                                 wire: dict[str, dict[str, float]]) -> float:
+    """Per-step bytes of the dense ``churn_resync`` channel (the CHOCO
+    rejoin exact-delta broadcast + mirror rebuild).  Kept OUT of the main
+    payload figure: it is a separate dense channel that exists only on
+    churn cells, and it is reported per step of the program that carries
+    it (the mixing round)."""
+    if s.arch == "gossip":
+        return wire.get("gossip", {}).get("churn_resync", 0.0)
+    rs = wire.get("sync", {}).get("churn_resync", 0.0)
+    return rs / s.local_steps if s.sync in ("local", "post_local") else rs
 
 
 def trainer_wire_per_step(s: Scenario, wire: dict[str, dict[str, float]]) -> float:
@@ -271,6 +302,17 @@ def run_trainer_scenario(
             for fmt, b in trainer_wire_formats(s, bundle.wire or {}).items()
         },
     }
+    if s.churn:
+        # a masked worker's round books no payload: the alive-weighted
+        # figure is the expected on-the-wire traffic; the resync channel
+        # (dense, rejoin-only semantics) is reported separately
+        frac = expected_live_fraction(s)
+        measured["live_fraction"] = float(frac)
+        measured["wire_kb_per_step_alive"] = measured["wire_kb_per_step"] * frac
+        measured["wire_format_kb"] = {
+            fmt: kb * frac for fmt, kb in measured["wire_format_kb"].items()}
+        measured["wire_resync_kb_per_step"] = (
+            trainer_wire_resync_per_step(s, bundle.wire or {}) / 1e3)
     predicted: dict[str, Any] = {}
     if s.overlap == "pipelined":
         predicted = predict_overlap_saving(

@@ -177,7 +177,7 @@ class _CompiledBundle:
     init_state: Callable
     train_step_k: Callable  # (state, batch, lr, knobs)
     inner_step_k: Callable | None
-    sync_step: Callable | None  # knob-free (the collective impl is static)
+    sync_step_k: Callable | None  # (state, knobs) — churn mask values traced
     gossip_step_k: Callable | None
     eval_step: Callable
     wire: dict[str, dict[str, float]]
@@ -291,7 +291,8 @@ def build_bundle(
         train_step=BoundStep(cb.train_step_k, knobs, 3),
         inner_step=(BoundStep(cb.inner_step_k, knobs, 3)
                     if cb.inner_step_k is not None else None),
-        sync_step=cb.sync_step,
+        sync_step=(BoundStep(cb.sync_step_k, knobs, 1)
+                   if cb.sync_step_k is not None else None),
         gossip_step=(BoundStep(cb.gossip_step_k, knobs, 3)
                      if cb.gossip_step_k is not None else None),
         eval_step=cb.eval_step,
@@ -346,6 +347,9 @@ def _compile_bundle(
         if opt_state_specs is None:  # momentum with other coefficient
             opt_state_specs = {"v": param_specs}
     comm_state_specs: dict[str, Any] = {"step": P()}
+    if spec.churn:
+        # previous round's per-shard participation bit — rejoin detection
+        comm_state_specs["alive_prev"] = P(all_axes)
     # pipelined overlap, staleness 1: the last microbatch's bucket grads are
     # double-buffered across the step boundary (aggregated by the NEXT step)
     pipe_carry = spec.overlap == "pipelined" and spec.overlap_staleness == 1
@@ -376,6 +380,8 @@ def _compile_bundle(
             opt.init(params),
         )
         cstate: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        if spec.churn:
+            cstate["alive_prev"] = comms.varying(jnp.ones((1,), f32), all_axes)
         if pipe_carry:
             cstate["overlap_pending"] = [
                 comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets
@@ -560,13 +566,52 @@ def _compile_bundle(
     )
 
     # ---- local SGD sync ----------------------------------------------------------
-    def _sync(state):
-        params = sync.average_params(state["params"], sync_axes, impl=comm.collective)
+    def _sync(state, knobs):
+        params = state["params"]
+        if spec.churn:
+            # masked runtime parameter averaging: each shard draws its
+            # participation bit for this SYNC ROUND (same key discipline as
+            # aggregate_buckets — the mask key folds out of the per-worker
+            # step key, so dropout 0 reproduces the unmasked round).  Dead
+            # shards freeze; live shards adopt the live-set average; under
+            # pull_avg a rejoiner adopts but is excluded as a donor (its
+            # stale params never drag the average), and its compressor
+            # state resets.
+            cstate = dict(state["comm"])
+            # participation unit = one member of the averaging group: the
+            # data shard for local/post_local (sync_axes == ax.data), the
+            # POD for pod_local — every shard of a pod must agree on the
+            # pod's alive bit or within-pod consistency breaks.
+            widx = jnp.zeros((), jnp.int32)
+            for axn in sync_axes:
+                widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
+            mkey = jax.random.fold_in(
+                jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"]),
+                widx)
+            u = jax.random.uniform(jax.random.fold_in(mkey, 0x6368), ())
+            stepf = state["step"].astype(f32)
+            in_window = ((stepf >= knobs["churn_start"])
+                         & (stepf < knobs["churn_end"]))
+            alive = jnp.where(in_window & (u < knobs["dropout"]), 0.0, 1.0)
+            alive_prev = cstate["alive_prev"].reshape(())
+            rejoined = alive * (1.0 - alive_prev)
+            donor = (alive * alive_prev if spec.rejoin_policy == "pull_avg"
+                     else None)
+            params = sync.average_params(params, sync_axes,
+                                         impl=comm.collective,
+                                         alive=alive, donor=donor)
+            for k in ("ef", "u"):
+                if k in cstate:
+                    cstate[k] = [jnp.where(rejoined > 0, jnp.zeros_like(e), e)
+                                 for e in cstate[k]]
+            cstate["alive_prev"] = alive.reshape(1)
+            return {**state, "params": params, "comm": cstate}
+        params = sync.average_params(params, sync_axes, impl=comm.collective)
         return {**state, "params": params}
 
     raw_sync = sync_step = None
     if comm.sync in ("local", "post_local") or comm.pod_local:
-        raw_sync = shard_map(_sync, mesh=mesh, in_specs=(state_specs,),
+        raw_sync = shard_map(_sync, mesh=mesh, in_specs=(state_specs, knob_pspecs),
                              out_specs=state_specs, check_vma=False)
         sync_step = jax.jit(raw_sync, donate_argnums=(0,))
 
@@ -593,7 +638,7 @@ def _compile_bundle(
             # churn: each shard draws its participation bit for this mixing
             # round (same key discipline as aggregate_buckets); a dead shard
             # drops out of the exchange, neighbors renormalize onto self
-            alive = None
+            alive = rejoined = None
             if spec.churn:
                 widx = jnp.zeros((), jnp.int32)
                 for axn in ax.data:
@@ -606,19 +651,27 @@ def _compile_bundle(
                 in_window = ((stepf >= knobs["churn_start"])
                              & (stepf < knobs["churn_end"]))
                 alive = jnp.where(in_window & (u < knobs["dropout"]), 0.0, 1.0)
+                # rejoin detection: alive now, masked out last round
+                rejoined = alive * (1.0 - cstate["alive_prev"].reshape(()))
+                cstate["alive_prev"] = alive.reshape(1)
             with comms.tag("gossip_mix"):
                 if comm.gossip_compress == "choco" and compressor is not None:
                     st = gossip.ChocoState(list(cstate["choco_xhat"]), list(cstate["choco_nbr"]))
                     key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
+                    # churn: mirror snap + exact-delta resync (both rejoin
+                    # policies — the mirror-drift invariant is mandatory)
                     bufs, st = gossip.choco_mix(
                         comm, compressor, key, bufs, st, ax.data,
                         w=knobs["gossip_w"], gamma=knobs["gossip_gamma"],
-                        comp_knobs=knobs["comp"],
+                        comp_knobs=knobs["comp"], alive=alive,
+                        rejoined=rejoined,
                     )
                     cstate["choco_xhat"], cstate["choco_nbr"] = st.x_hat, st.x_hat_nbr
                 else:
-                    bufs = gossip.dpsgd_mix(bufs, ax.data, w=knobs["gossip_w"],
-                                            alive=alive)
+                    bufs = gossip.dpsgd_mix(
+                        bufs, ax.data, w=knobs["gossip_w"], alive=alive,
+                        rejoined=(rejoined
+                                  if spec.rejoin_policy == "pull_avg" else None))
             new_leaves = aggregate._scatter_buckets(bplan, bufs, leaves)
             new_params = jax.tree.unflatten(treedef, new_leaves)
             cstate["step"] = cstate["step"] + 1
@@ -668,12 +721,15 @@ def _compile_bundle(
             jax.eval_shape(lambda *a: fn(*a), *args)
         wire[name] = wlog.by_tag()
         # per-encoding breakdown rides along under "<name>_formats" so wire
-        # columns can show WHAT the bytes were (f32 vs int8 vs packed1/2)
-        wire[name + "_formats"] = wlog.by_wire_format()
+        # columns can show WHAT the bytes were (f32 vs int8 vs packed1/2);
+        # the dense churn_resync rejoin channel stays out of it — it is a
+        # separate figure (trainer_wire_resync_per_step), not payload
+        wire[name + "_formats"] = wlog.by_wire_format(
+            exclude_tags=("churn_resync",))
 
     _trace_wire("train", raw_train, state_abstract, batch_abs, lr_abs, knobs0)
     _trace_wire("inner", raw_inner, state_abstract, batch_abs, lr_abs, knobs0)
-    _trace_wire("sync", raw_sync, state_abstract)
+    _trace_wire("sync", raw_sync, state_abstract, knobs0)
     _trace_wire("gossip", raw_gossip, state_abstract, batch_abs, lr_abs, knobs0)
 
     return _CompiledBundle(
@@ -682,7 +738,7 @@ def _compile_bundle(
         batch_specs=batch_abs, batch_pspecs=batch_pspecs,
         init_state=init_state,
         train_step_k=train_step, inner_step_k=inner_step,
-        sync_step=sync_step, gossip_step_k=gossip_step,
+        sync_step_k=sync_step, gossip_step_k=gossip_step,
         eval_step=eval_step, wire=wire,
     )
 

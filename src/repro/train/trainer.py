@@ -44,6 +44,41 @@ class Trainer:
         )
         return b.init_state(params)
 
+    def restore_rejoin(self, path: str):
+        """Churn-aware restore for a process re-entering a run: pull params,
+        optimizer state and the step counter from the checkpoint at ``path``
+        (``partial=True`` — the checkpoint's comm state is stale by
+        construction) and re-initialize communication state FRESH, so the
+        rejoiner's compressor state (EF residual, momentum, PowerSGD factors,
+        CHOCO mirrors) starts from the same zeros a never-compressed worker
+        would carry.  The bundle's churn machinery then resynchronizes it on
+        its first communication round per the spec's ``rejoin_policy``.
+
+        Returns ``(state, step)`` ready to pass to
+        ``fit(state, steps, start_step=step)``.
+        """
+        from repro.checkpoint import restore
+
+        b = self.bundle
+        like = {
+            "params": b.state_abstract["params"],
+            "opt": b.state_abstract["opt"],
+            "step": b.state_abstract["step"],
+        }
+        shardings = b.shardings({
+            "params": b.state_specs["params"],
+            "opt": b.state_specs["opt"],
+            "step": b.state_specs["step"],
+        })
+        restored, step = restore(path, like, shardings, partial=True)
+        state = b.init_state(restored["params"])
+        state["opt"] = restored["opt"]
+        state["step"] = restored["step"]
+        # distinct buffer: step programs donate the state, and donating one
+        # buffer through two arguments is an XLA error
+        state["comm"]["step"] = jax.numpy.copy(restored["step"])
+        return state, step
+
     def fit(self, state, steps: int, start_step: int = 0):
         b = self.bundle
         comm = b.comm

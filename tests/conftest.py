@@ -17,12 +17,21 @@ def _fresh_compile_caches():
     build-count assertions (test_churn, test_sweep_batched, the benchmark
     smoke tests) measure their OWN cells rather than leftovers from whatever
     module ran before them.  Lazy imports keep collection cheap; modules that
-    never touch a cache pay one no-op clear."""
+    never touch a cache pay one no-op clear.
+
+    The churn/rejoin resync programs have no cache of their own — the
+    structural ``rejoin_policy`` is part of both cache keys (engine
+    ``shape_class_key``, trainer ``bundle_spec``), so clearing these two
+    covers every compiled resync graph.  The scenario problem cache is
+    cleared too: it keys on workload values only, but zeroing it keeps
+    per-module memory flat and rules out cross-module aliasing."""
     from repro.core.simulate import engine_cache_clear, engine_cache_stats
+    from repro.experiments import runner as _runner
     from repro.train.steps import bundle_cache_clear, bundle_cache_stats
 
     engine_cache_clear()
     bundle_cache_clear()
+    _runner._PROBLEM_CACHE.clear()
     e, b = engine_cache_stats(), bundle_cache_stats()
     assert (e.compiles, e.hits) == (0, 0), f"engine cache not cleared: {e}"
     assert (b.builds, b.hits) == (0, 0), f"bundle cache not cleared: {b}"

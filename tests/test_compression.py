@@ -281,3 +281,167 @@ def test_adaptive_qsgd_levels_track_dispersion():
     assert s_tight > s_dense, (s_tight, s_dense)
     # the int8 wire format caps the level count
     assert s_tight <= 127.0
+
+
+# ---------------------------------------------------------------------------
+# Stateful compressors under churn (ISSUE 8): the registry lane's
+# freeze -> resync contract.  PowerSGD carries a factor Q across rounds and
+# CHOCO carries x-hat mirrors; a masked round must neither poison the state
+# nor change the all-alive program.
+# ---------------------------------------------------------------------------
+
+
+def _worker_grads(n_workers, n, seed):
+    return _vec(seed, n=n_workers * n).reshape(n_workers, n)
+
+
+def test_powersgd_masked_aggregate_all_alive_matches_unmasked():
+    """An all-ones mask with n_eff == n_workers reproduces the unmasked
+    factor iteration bitwise (same psums, same denominators)."""
+    from repro.core.aggregate import _powersgd_aggregate
+
+    comp = get_compressor("powersgd", rank=2)
+    W, n = 4, 96
+    grads = _worker_grads(W, n, 31)
+    q0 = comp.init_q(n, jax.random.key(7)).reshape(-1)
+
+    def unmasked(a):
+        return _powersgd_aggregate(comp, a, q0, ("w",), W)
+
+    def masked(a):
+        return _powersgd_aggregate(comp, a, q0, ("w",), W,
+                                   alive=jnp.ones((), f32),
+                                   n_eff=jnp.asarray(float(W), f32))
+
+    agg_u, q_u = jax.vmap(unmasked, axis_name="w")(grads)
+    agg_m, q_m = jax.vmap(masked, axis_name="w")(grads)
+    np.testing.assert_array_equal(np.asarray(agg_m), np.asarray(agg_u))
+    np.testing.assert_array_equal(np.asarray(q_m), np.asarray(q_u))
+
+
+def test_powersgd_masked_aggregate_excludes_dead_worker():
+    """Masking worker 3 over a 4-wide psum equals the unmasked 3-worker
+    aggregation of the live gradients: the dead contribution is zeroed
+    before BOTH factor psums and the denominators renormalize, so the
+    factor iteration runs on live gradients only — and the psum'd Q is the
+    live representative every shard (including the dead one) carries."""
+    from repro.core.aggregate import _powersgd_aggregate
+
+    comp = get_compressor("powersgd", rank=2)
+    n = 96
+    grads = _worker_grads(4, n, 32)
+    q0 = comp.init_q(n, jax.random.key(7)).reshape(-1)
+    alive = jnp.array([1.0, 1.0, 1.0, 0.0], f32)
+
+    def masked(a, m):
+        return _powersgd_aggregate(comp, a, q0, ("w",), 4, alive=m,
+                                   n_eff=jnp.asarray(3.0, f32))
+
+    def live3(a):
+        return _powersgd_aggregate(comp, a, q0, ("w",), 3)
+
+    agg_m, q_m = jax.vmap(masked, axis_name="w")(grads, alive)
+    agg_l, q_l = jax.vmap(live3, axis_name="w")(grads[:3])
+    np.testing.assert_allclose(np.asarray(agg_m[0]), np.asarray(agg_l[0]),
+                               rtol=1e-5, atol=1e-7)
+    # every shard — dead included — ends the round with the live-set Q:
+    # that IS the rejoin re-warm-start
+    for w in range(4):
+        np.testing.assert_allclose(np.asarray(q_m[w]), np.asarray(q_l[0]),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def _choco_round(alive, rejoined, params, st, key, comp):
+    from repro.core.gossip import choco_mix
+    from repro.core.types import CommConfig
+
+    comm = CommConfig(aggregator="gossip", gossip_compress="choco")
+
+    def step(p, xh, xn, a, r):
+        from repro.core.gossip import ChocoState
+
+        new_x, st2 = choco_mix(comm, comp, key, [p], ChocoState([xh], [xn]),
+                               ("w",), alive=a, rejoined=r)
+        return new_x[0], st2.x_hat[0], st2.x_hat_nbr[0]
+
+    return jax.vmap(step, axis_name="w")(params, st[0], st[1], alive, rejoined)
+
+
+def _assert_choco_mirror_invariant(xh, xn, workers=None):
+    """x_hat_nbr_i == sum of ring neighbors' x_hat (the drift invariant).
+    ``workers`` restricts the check: a DEAD worker's own mirror is stale by
+    design while it is out (its neighbors keep compressing) — the rejoin
+    round rebuilds it from the dense mirror exchange."""
+    W = xh.shape[0]
+    for i in (range(W) if workers is None else workers):
+        ref = np.asarray(xh[(i + 1) % W]) + np.asarray(xh[(i - 1) % W])
+        np.testing.assert_allclose(np.asarray(xn[i]), ref, rtol=1e-5,
+                                   atol=1e-6, err_msg=f"worker {i}")
+
+
+def test_choco_mirror_invariant_survives_drop_and_rejoin():
+    """The CHOCO mirror-drift invariant holds through a drop/rejoin cycle:
+    round 1 masks worker 2 out (its mirrors freeze, peers weight its
+    payload 0), round 2 rejoins it (mirror snaps to its params, the exact
+    delta broadcasts on the dense resync channel) — after EVERY round each
+    worker's x_hat_nbr equals the sum of its neighbors' x_hat."""
+    comp = get_compressor("qsgd", levels=16)
+    W, n = 4, 64
+    params = _worker_grads(W, n, 33)
+    xh = jnp.zeros((W, n), f32)
+    xn = jnp.zeros((W, n), f32)
+
+    ones = jnp.ones((W,), f32)
+    zeros = jnp.zeros((W,), f32)
+    dead2 = ones.at[2].set(0.0)
+    rej2 = zeros.at[2].set(1.0)
+
+    # round 1: worker 2 dead — live workers keep the invariant; worker 2's
+    # own mirror is allowed to go stale (rebuilt at rejoin)
+    params, xh, xn = _choco_round(dead2, zeros, params, (xh, xn),
+                                  jax.random.key(0), comp)
+    _assert_choco_mirror_invariant(xh, xn, workers=(0, 1, 3))
+    # the dead worker froze entirely
+    np.testing.assert_array_equal(np.asarray(xh[2]), np.zeros((n,), np.float32))
+    # round 2: worker 2 rejoins — mirror snaps to its (frozen) entry params
+    entry2 = np.asarray(params[2])
+    params, xh, xn = _choco_round(ones, rej2, params, (xh, xn),
+                                  jax.random.key(1), comp)
+    np.testing.assert_array_equal(np.asarray(xh[2]), entry2)
+    _assert_choco_mirror_invariant(xh, xn)
+    # round 3: steady state again
+    params, xh, xn = _choco_round(ones, zeros, params, (xh, xn),
+                                  jax.random.key(2), comp)
+    _assert_choco_mirror_invariant(xh, xn)
+
+
+def test_choco_all_alive_mask_matches_unmasked():
+    """The masked CHOCO round with an all-ones mask and no rejoiners
+    reproduces the unmasked round (the churn-free program)."""
+    from repro.core.gossip import ChocoState, choco_mix
+    from repro.core.types import CommConfig
+
+    comp = get_compressor("qsgd", levels=16)
+    comm = CommConfig(aggregator="gossip", gossip_compress="choco")
+    W, n = 4, 64
+    params = _worker_grads(W, n, 34)
+    xh = _worker_grads(W, n, 35) * 0.1
+    xn = _worker_grads(W, n, 36) * 0.1
+
+    def unmasked(p, h, b):
+        x2, st2 = choco_mix(comm, comp, jax.random.key(5), [p],
+                            ChocoState([h], [b]), ("w",))
+        return x2[0], st2.x_hat[0], st2.x_hat_nbr[0]
+
+    def masked(p, h, b):
+        x2, st2 = choco_mix(comm, comp, jax.random.key(5), [p],
+                            ChocoState([h], [b]), ("w",),
+                            alive=jnp.ones((), f32),
+                            rejoined=jnp.zeros((), f32))
+        return x2[0], st2.x_hat[0], st2.x_hat_nbr[0]
+
+    out_u = jax.vmap(unmasked, axis_name="w")(params, xh, xn)
+    out_m = jax.vmap(masked, axis_name="w")(params, xh, xn)
+    for a, b, what in zip(out_m, out_u, ("x", "x_hat", "x_hat_nbr")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7, err_msg=what)

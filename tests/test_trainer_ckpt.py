@@ -60,3 +60,112 @@ print("CKPT-RESUME OK")
 def test_checkpoint_resume_across_meshes():
     out = run_subprocess_devices(SCRIPT, n_devices=8, timeout=1800)
     assert "CKPT-RESUME OK" in out
+
+
+# ---------------------------------------------------------------------------
+# key-mismatch diagnostics + partial restore (the rejoin path's contract)
+# ---------------------------------------------------------------------------
+
+
+def test_restore_key_mismatch_names_both_sides(tmp_path):
+    """The mismatch error carries FULL missing/extra key lists (no [:8]
+    truncation) and says which side each list came from."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint import restore, save
+
+    saved = {"params": {f"w{i}": jnp.zeros((2,)) for i in range(12)},
+             "step": jnp.zeros((), jnp.int32)}
+    save(str(tmp_path / "ck"), saved, step=3)
+
+    asked = {"params": {f"w{i}": jnp.zeros((2,)) for i in range(4)},
+             "opt": {"mu": jnp.zeros((2,))},
+             "step": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError) as e:
+        restore(str(tmp_path / "ck"), asked)
+    msg = str(e.value)
+    # every missing checkpoint key is listed (w4..w11: 8 of them), and the
+    # restore-tree-only key too, each count labeled with its side
+    assert "8 checkpoint key(s) absent from the restore tree" in msg
+    for i in range(4, 12):
+        assert f"w{i}" in msg
+    assert "1 restore-tree key(s) absent from the checkpoint" in msg
+    assert "mu" in msg
+    assert "..." not in msg
+
+
+def test_partial_restore_allows_checkpoint_superset(tmp_path):
+    """``partial=True`` restores a subtree out of a full checkpoint — the
+    churn rejoin path pulls params/opt/step and leaves the stale comm state
+    behind.  Keys the restore tree asks for must still all exist."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import restore, save
+
+    full = {"params": {"w": jnp.arange(4.0)}, "comm": {"ef": jnp.ones((3,))},
+            "step": jnp.asarray(7, jnp.int32)}
+    save(str(tmp_path / "ck"), full, step=7)
+
+    like = {"params": {"w": jnp.zeros((4,))}, "step": jnp.zeros((), jnp.int32)}
+    out, step = restore(str(tmp_path / "ck"), like, partial=True)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.arange(4.0, dtype=np.float32))
+    assert int(out["step"]) == 7
+    # a key the checkpoint never saved still fails loudly, even partial
+    with pytest.raises(ValueError, match="absent from the checkpoint"):
+        restore(str(tmp_path / "ck"),
+                {"params": {"nope": jnp.zeros((1,))}}, partial=True)
+
+
+# ---------------------------------------------------------------------------
+# churn-aware rejoin restore: params/opt/step from the checkpoint, comm
+# state fresh, training continues
+# ---------------------------------------------------------------------------
+
+REJOIN_RESTORE_SCRIPT = r"""
+import numpy as np, tempfile
+from repro.core.types import CommConfig
+from repro.experiments.trainer_substrate import make_tiny_workload
+from repro.launch.mesh import make_test_mesh
+from repro.optim.optimizers import momentum_sgd
+from repro.optim.schedules import constant
+from repro.train.steps import build_bundle
+from repro.train.trainer import Trainer
+from repro.utils.tree import flatten_with_paths
+
+cfg, shape, data = make_tiny_workload()
+comm = CommConfig(compressor="qsgd", compressor_kwargs={"levels": 4},
+                  error_feedback=True, momentum_correction=0.9,
+                  churn=True, dropout_rate=0.2, rejoin_policy="pull_avg")
+d = tempfile.mkdtemp()
+bundle = build_bundle(cfg, make_test_mesh(data=4, model=1), comm,
+                      momentum_sgd(0.9), shape, seed=0, microbatch=1)
+tr = Trainer(bundle, data, constant(0.1), ckpt_dir=d, ckpt_every=3,
+             log_every=1)
+state = tr.fit(tr.init(0), 6)
+
+st2, step = tr.restore_rejoin(f"{d}/step6")
+assert step == 6 and int(st2["step"]) == 6
+assert int(np.asarray(st2["comm"]["step"]).ravel()[0]) == 6
+# params/opt round-trip exactly
+for side in ("params", "opt"):
+    a = flatten_with_paths(st2[side]); b = flatten_with_paths(state[side])
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
+# comm state is FRESH: EF residuals zero, everyone marked alive
+assert all(float(np.abs(np.asarray(e)).max()) == 0.0 for e in st2["comm"]["ef"])
+assert float(np.asarray(st2["comm"]["alive_prev"]).min()) == 1.0
+# and the run continues finitely from the restored state
+tr.fit(st2, 4, start_step=step)
+assert all(np.isfinite(h["loss"]) for h in tr.history)
+print("REJOIN-RESTORE OK")
+"""
+
+
+@pytest.mark.slow
+def test_restore_rejoin_resyncs_comm_state():
+    out = run_subprocess_devices(REJOIN_RESTORE_SCRIPT, n_devices=4, timeout=1800)
+    assert "REJOIN-RESTORE OK" in out
