@@ -24,6 +24,7 @@ MODULES = (
     ("elastic", "benchmarks.churn_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("train_micro", "benchmarks.train_micro"),
+    ("coldstart", "benchmarks.coldstart_bench"),
 )
 
 

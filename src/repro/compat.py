@@ -72,6 +72,44 @@ else:
         return x
 
 
+def enable_compilation_cache(path: str) -> str:
+    """Point jax's persistent compiled-program cache at ``path`` on any jax.
+
+    jax 0.4.26+/0.5+ expose the cache through config keys
+    (``jax_compilation_cache_dir`` + the two persistence thresholds); older
+    releases only have the experimental ``compilation_cache`` module surface
+    (``set_cache_dir`` / ``initialize_cache``).  The thresholds are forced to
+    "cache everything" — the repo's compiled programs are small but
+    re-compiled by every process, which is exactly the regime the defaults
+    (min 1s compile time) would skip.  Returns the mechanism used.
+    """
+    import os
+
+    os.makedirs(path, exist_ok=True)
+    how = "config"
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+    except (AttributeError, ValueError):
+        from jax.experimental.compilation_cache import compilation_cache as cc
+
+        if hasattr(cc, "set_cache_dir"):
+            cc.set_cache_dir(path)
+            how = "set_cache_dir"
+        else:
+            cc.initialize_cache(path)
+            how = "initialize_cache"
+    for name, val in (
+        ("jax_enable_compilation_cache", True),
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+        ("jax_persistent_cache_min_entry_size_bytes", -1),
+    ):
+        try:
+            jax.config.update(name, val)
+        except (AttributeError, ValueError):
+            pass  # threshold knob absent on this jax: defaults apply
+    return how
+
+
 if hasattr(jax.lax, "axis_size"):
     axis_size = jax.lax.axis_size
 else:

@@ -122,6 +122,14 @@ def _wire_fmt() -> str:
     return getattr(_STATE, "wire_fmt", "")
 
 
+def capturing() -> bool:
+    """True while some ``capture()`` is open on this thread.  Cached program
+    paths that would skip tracing entirely (the persistent executable cache)
+    consult this to keep the contract that a capture held open around a
+    step's first call observes that step's collectives."""
+    return _log() is not None
+
+
 @contextlib.contextmanager
 def capture():
     """Collect collective records issued while tracing under this context."""

@@ -1,0 +1,193 @@
+"""Persistent on-disk compiled-program cache under both compilation layers.
+
+Two cooperating pieces:
+
+* **jax's persistent compilation cache** — ``configure(path)`` routes through
+  ``repro.compat.enable_compilation_cache`` so every XLA executable compiled
+  by this process (engine class programs from
+  ``simulate_training_classbatch``, trainer bundles from ``build_bundle``)
+  is serialized under ``path`` and deserialized by later processes instead
+  of re-compiled.  jax keys those entries by a hash of the optimized HLO +
+  compile options, which is opaque to the repo's taxonomy.
+
+* **a repro-level manifest** next to it (``<path>/repro-manifest/``) keyed by
+  the repo's own shape-class signatures — the engine cache key built on
+  ``shape_class_key`` and the trainer ``bundle_cache_key`` — plus the
+  jax/jaxlib version and device fingerprint (a cache produced by a different
+  jax or device kind would never hit at the XLA layer, so the manifest must
+  not claim it would).  ``record_compile`` is called exactly when an
+  in-memory registry MISSES and builds fresh; if the manifest already holds
+  the signature, some previous process compiled this shape class and the
+  build is a persistent **hit** (trace + deserialize, no XLA compile),
+  otherwise a persistent **miss**.  That makes cache effectiveness
+  observable at shape-class granularity in ``engine_cache_stats()`` /
+  ``bundle_cache_stats()`` and every benchmark lane's ``--emit-json``
+  record, instead of only as wall-clock.
+
+* **serialized AOT executables** (``<path>/repro-exec/<digest>/``, one file
+  per step program) — jax's cache still pays tracing + lowering on every
+  process, which bounds the warm speedup at ~2x for the trainer bundles.
+  ``repro.train.steps`` additionally AOT-compiles each bundle step from its
+  build-time avals and serializes the whole executable
+  (``jax.experimental.serialize_executable``), so a warm process
+  deserializes and runs with NO tracing at all; the build-time wire
+  artifact rides along (``wire.json``) so warm builds skip the abstract
+  wire traces too.  Digests share ``stable_digest`` with the manifest, so
+  the fingerprint (jax version, device kind/count) gates portability.
+
+Nothing here imports jax at module load — configuration happens lazily so
+the ``experiments/run.py`` set-XLA_FLAGS-before-jax contract is preserved.
+The cache directory comes from ``configure(path)`` (the ``--cache-dir``
+flags) or the ``REPRO_CACHE_DIR`` environment variable; with neither set,
+every call is a counted-nothing no-op and behavior is identical to the
+pre-cache repo.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+
+ENV_VAR = "REPRO_CACHE_DIR"
+MANIFEST_DIRNAME = "repro-manifest"
+EXEC_DIRNAME = "repro-exec"
+
+_DIR: str | None = None
+_ENV_CHECKED = False
+_MECHANISM: str | None = None
+
+
+@dataclass
+class PersistentCacheStats:
+    """Per-layer (``engine`` / ``bundle``) persistent-cache counters.
+
+    ``hits``/``misses`` count fresh in-memory-registry builds whose shape
+    signature was / was not already in the on-disk manifest; in-memory
+    registry hits never consult the disk and are counted by the existing
+    ``EngineStats``/``BundleCacheStats`` counters instead.
+    """
+
+    hits: int = 0
+    misses: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses, "dir": cache_dir()}
+
+
+_STATS: dict[str, PersistentCacheStats] = {}
+
+
+def stats(kind: str) -> PersistentCacheStats:
+    return _STATS.setdefault(kind, PersistentCacheStats())
+
+
+def reset_stats() -> None:
+    _STATS.clear()
+
+
+def cache_fingerprint() -> tuple:
+    """jax/jaxlib versions + device platform/kind: entries are only portable
+    within one fingerprint (a different jax or backend re-compiles anyway)."""
+    import jax
+
+    try:
+        import jaxlib
+
+        jaxlib_v = jaxlib.__version__
+    except ImportError:  # pragma: no cover - jaxlib always ships with jax
+        jaxlib_v = "?"
+    dev = jax.devices()[0]
+    return (jax.__version__, jaxlib_v, dev.platform, dev.device_kind, jax.device_count())
+
+
+def stable_repr(key) -> str:
+    """The serialization contract for manifest keys: ``repr`` of the cache-key
+    tuple.  Every component of both layers' keys is primitives / primitive
+    dataclasses / tuples (guarded by tests/test_persistent_cache.py golden
+    files), so the repr is identical across processes."""
+    return repr(key)
+
+
+def stable_digest(kind: str, key) -> str:
+    payload = repr((kind, cache_fingerprint(), stable_repr(key)))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def _pickup_env() -> None:
+    global _ENV_CHECKED
+    if _ENV_CHECKED or _DIR is not None:
+        return
+    _ENV_CHECKED = True
+    path = os.environ.get(ENV_VAR, "").strip()
+    if path:
+        configure(path)
+
+
+def configure(path: str | None) -> str | None:
+    """Enable (or, with ``None``, detach) the persistent cache at ``path``.
+
+    Enabling imports jax — call only after any XLA_FLAGS setup.  Detaching
+    stops manifest recording but cannot un-register the directory from jax's
+    own cache for this process.  Returns the previous directory.
+    """
+    global _DIR, _MECHANISM, _ENV_CHECKED
+    prev = _DIR
+    _ENV_CHECKED = True
+    if path is None:
+        _DIR = None
+        return prev
+    from repro import compat
+
+    path = os.path.abspath(path)
+    _MECHANISM = compat.enable_compilation_cache(path)
+    os.makedirs(os.path.join(path, MANIFEST_DIRNAME), exist_ok=True)
+    _DIR = path
+    return prev
+
+
+def cache_dir() -> str | None:
+    _pickup_env()
+    return _DIR
+
+
+def is_enabled() -> bool:
+    return cache_dir() is not None
+
+
+def exec_dir(kind: str, key) -> str | None:
+    """Directory for one shape class's serialized AOT executables
+    (``<cache_dir>/repro-exec/<digest>/``) — jax's own cache skips only the
+    XLA backend compile; the executables serialized here
+    (``jax.experimental.serialize_executable``) also skip tracing/lowering
+    on warm processes.  None when no persistent cache is configured."""
+    d = cache_dir()
+    if d is None:
+        return None
+    return os.path.join(d, EXEC_DIRNAME, stable_digest(kind, key))
+
+
+def record_compile(kind: str, key) -> bool:
+    """Called on a fresh in-memory-registry build.  Returns True iff the
+    signature was already in the manifest (persistent hit).  No-op (False,
+    uncounted) when no cache dir is configured."""
+    d = cache_dir()
+    if d is None:
+        return False
+    st = stats(kind)
+    path = os.path.join(d, MANIFEST_DIRNAME, stable_digest(kind, key) + ".json")
+    if os.path.exists(path):
+        st.hits += 1
+        return True
+    st.misses += 1
+    tmp = path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"kind": kind, "key": stable_repr(key), "fingerprint": list(cache_fingerprint())}, f)
+    os.replace(tmp, path)  # atomic: concurrent processes race benignly
+    return False
+
+
+def record(kind: str) -> dict:
+    """The ``persistent_cache`` block for --emit-json records."""
+    return stats(kind).as_dict()

@@ -43,6 +43,7 @@ def simulate_schedule(
     mode: str = "wfbp",  # sequential | wfbp | mgwfbp | pipelined
     bucket_bytes: float = 0.0,
     staleness: int = 1,  # pipelined only: 1 = double-buffered, 0 = flush
+    launch: float = 0.0,  # per-message fixed dispatch overhead (calibrated)
 ) -> dict:
     """Iteration time of backward+comm under the given schedule.
 
@@ -105,7 +106,7 @@ def simulate_schedule(
         else:
             ready_t = max(ready[s.name] for s in bucket)
         start = max(ready_t, net_free)
-        dur = allreduce_cost(alg, n_workers, nbytes, link)
+        dur = allreduce_cost(alg, n_workers, nbytes, link) + launch
         net_free = start + dur
         total_comm += dur
     # a fully hidden comm tail still waits for the backward to finish

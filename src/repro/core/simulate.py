@@ -747,6 +747,14 @@ class EngineStats:
     compiles: int = 0
     hits: int = 0
 
+    @property
+    def persistent_cache(self) -> dict:
+        """On-disk cache effectiveness {hits, misses, dir} at shape-class
+        granularity (repro.core.compilecache manifest)."""
+        from repro.core import compilecache
+
+        return compilecache.record("engine")
+
 
 _ENGINE_STATS = EngineStats()
 _ENGINE_CACHE: dict[tuple, tuple] = {}  # key -> (fn, problem, comp) (pinned)
@@ -870,6 +878,14 @@ def simulate_training_classbatch(
         fn = jax.jit(jax.vmap(jax.vmap(replica_fn, in_axes=(None, 0, None)),
                               in_axes=(0, 0, 0)))
         _ENGINE_STATS.compiles += 1
+        if has_data:
+            # manifest the fresh build: a stable pkey (data_key-based) means a
+            # later process re-deriving this signature deserializes the XLA
+            # executable from disk instead of compiling.  Legacy id(problem)
+            # pkeys are process-local and never manifested.
+            from repro.core import compilecache
+
+            compilecache.record_compile("engine", cache_key)
         if cache:
             if len(_ENGINE_CACHE) >= _ENGINE_CACHE_CAP:
                 _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))

@@ -141,6 +141,16 @@ def main(argv=None) -> int:
                    help="skip the engine-vs-reference speedup benchmark in "
                         "--emit-json (it runs the 300-step reference loop, "
                         "~10s+ — too heavy for smoke checks)")
+    p.add_argument("--cache-dir", default=os.environ.get("REPRO_CACHE_DIR", ""),
+                   metavar="DIR",
+                   help="persistent on-disk compiled-program cache: XLA "
+                        "executables compiled by this sweep are reused by "
+                        "later processes (default: $REPRO_CACHE_DIR)")
+    p.add_argument("--calibration", default="", metavar="PATH",
+                   help="machine-fitted cost-model profile (core.calibrate) "
+                        "for the predicted columns; empty = auto-adopt "
+                        "<cache-dir>/calibration.json when present; 'none' = "
+                        "force the uncalibrated datasheet constants")
     args = p.parse_args(argv)
 
     base = dict(
@@ -176,6 +186,7 @@ def main(argv=None) -> int:
     from repro.core.simulate import engine_cache_stats
     from repro.experiments.tables import format_csv, format_table
 
+    _configure_cache_and_calibration(args)  # jax is imported by now
     st0 = dataclasses.replace(engine_cache_stats())
     t0 = time.perf_counter()
     results = run_scenarios(scenarios, args.substrate, replicas=args.replicas)
@@ -196,6 +207,7 @@ def main(argv=None) -> int:
                 "compiles": st1.compiles - st0.compiles,
                 "cache_hits": st1.hits - st0.hits,
                 "cells_per_s": len(results) / sweep_s,
+                "persistent_cache": st1.persistent_cache,
             }
             if not args.no_speedup:
                 record["engine_speedup"] = measure_engine_speedup()
@@ -203,6 +215,27 @@ def main(argv=None) -> int:
             json.dump(record, f, indent=2)
         print(f"# wrote {args.emit_json}", file=sys.stderr)
     return 0
+
+
+def _configure_cache_and_calibration(args) -> None:
+    """Apply ``--cache-dir`` / ``--calibration``.  Imports jax (through
+    ``compilecache.configure``), so it must run only after the lane's
+    XLA_FLAGS setup — i.e. after ``_ensure_host_devices`` in the trainer
+    lane — to preserve the set-flags-before-jax contract."""
+    from repro.core import calibrate, compilecache
+
+    if args.cache_dir:
+        compilecache.configure(args.cache_dir)
+    if args.calibration == "none":
+        calibrate.set_active(None)
+    elif args.calibration:
+        calibrate.set_active(calibrate.CalibrationProfile.load(args.calibration))
+    else:
+        profile = calibrate.load_default()
+        if profile is not None:
+            print(f"# calibration: adopted {calibrate.default_path()}",
+                  file=sys.stderr)
+            calibrate.set_active(profile)
 
 
 def _ensure_host_devices(n: int) -> int:
@@ -227,6 +260,7 @@ def _trainer_sweep(args, scenarios) -> int:
     fit the available devices are skipped with the reason on stderr."""
     want = min(max(s.n_workers for s in scenarios), 8)  # bound host-dev cost
     ndev = _ensure_host_devices(want)
+    _configure_cache_and_calibration(args)  # after XLA_FLAGS are settled
 
     from repro.experiments.tables import format_csv, format_table
     from repro.experiments.trainer_substrate import (
@@ -271,6 +305,7 @@ def _trainer_sweep(args, scenarios) -> int:
             "builds": builds,
             "cache_hits": hits,
             "cells_per_s": len(results) / sweep_s,
+            "persistent_cache": st1.persistent_cache,
         }
         with open(args.emit_json, "w") as f:
             json.dump(record, f, indent=2)
@@ -297,10 +332,20 @@ def emit_json_record(results, sweep_s: float) -> dict:
             "predicted": {k: v for k, v in r.predicted.items()},
             "rel_err": rel_err,
         })
+    from repro.core import calibrate, compilecache
+
     return {
         "substrate": results[0].substrate if results else "",
         "n_cells": len(results),
         "sweep_wall_clock_s": sweep_s,
+        # uniform across every lane: on-disk cache effectiveness at each
+        # compilation layer's own key granularity, and whether the predicted
+        # columns used machine-fitted constants
+        "persistent_cache": {
+            "engine": compilecache.record("engine"),
+            "bundle": compilecache.record("bundle"),
+        },
+        "calibrated": calibrate.get_active() is not None,
         "cells": cells,
     }
 

@@ -642,6 +642,7 @@ def measure_sweep_speedup(
         "compiles_batched": compiles_batched,
         "batched_s": batched_s,
         "cells_per_s_batched": len(scenarios) / batched_s,
+        "persistent_cache": st.persistent_cache,
     }
     if not percell:
         return out

@@ -207,6 +207,8 @@ def predict_overlap_saving(
     payload_round: float,
     n_buckets: int,
     data_par: int,
+    link=None,
+    launch: float | None = None,
 ) -> dict[str, float]:
     """§VII prediction for one trainer cell: feed the cell's OWN message
     structure (microbatch aggregation rounds x bucket-plan messages,
@@ -214,10 +216,13 @@ def predict_overlap_saving(
     :func:`plan_payload_bytes`, compute time from the measured step) into
     :func:`repro.core.schedule.simulate_schedule` and return the predicted
     per-step times and overlap saving vs the sequential schedule of the same
-    cell.  The alpha-beta link comes from the Scenario, so the prediction is
-    an analytic-network quantity — on a forced-host mesh the measured saving
-    reflects scheduler/XLA effects instead, and the two are recorded side by
-    side (predicted-vs-measured, the Shi et al. methodology)."""
+    cell.  The alpha-beta link and per-message launch overhead come from the
+    active :mod:`repro.core.calibrate` profile when one is installed
+    (machine-fitted constants, the Shi et al. methodology) and fall back to
+    the Scenario's datasheet constants otherwise — on a forced-host mesh the
+    measured saving reflects scheduler/XLA effects, and the two are recorded
+    side by side (predicted-vs-measured)."""
+    from repro.core import calibrate
     from repro.core.costmodel import Link
     from repro.core.schedule import LayerSpec, simulate_schedule
 
@@ -225,7 +230,10 @@ def predict_overlap_saving(
     M = max(1, s.microbatch)
     rounds = M if s.overlap == "pipelined" else 1
     nb = max(1, n_buckets)
-    link = Link(alpha=s.alpha, beta=s.beta)
+    if link is None:
+        link = calibrate.active_link(Link(alpha=s.alpha, beta=s.beta))
+    if launch is None:
+        launch = calibrate.active_launch(0.0)
 
     def simulate(n_rounds: int, mode: str) -> dict:
         layers = [
@@ -235,7 +243,8 @@ def predict_overlap_saving(
         ]
         return simulate_schedule(layers, n_workers=n, link=link,
                                  alg=s.allreduce_alg, mode=mode,
-                                 staleness=s.overlap_staleness)
+                                 staleness=s.overlap_staleness,
+                                 launch=launch)
 
     seq = simulate(1, "sequential")
     pipe = simulate(rounds, "pipelined")
@@ -244,6 +253,51 @@ def predict_overlap_saving(
         "iter_time": own["iter_time"],
         "overlap_saving_s": seq["iter_time"] - pipe["iter_time"],
         "comm_time": own["total_comm_time"],
+    }
+
+
+def predict_trainer_step(
+    s: Scenario,
+    *,
+    data_par: int,
+    payload_round: float,
+    n_buckets: int,
+    profile=None,
+) -> dict[str, float]:
+    """Analytic per-step wall-clock prediction for ANY trainer cell: compute
+    term + (amortized sync rounds) x (collective cost of the cell's analytic
+    payload + per-message launch overhead).  With a
+    :class:`repro.core.calibrate.CalibrationProfile` (argument, else the
+    active one) all three constant families are machine-fitted — link
+    alpha/beta from timed psum rounds, launch from timed dispatches, compute
+    from the measured dense step; without one the datasheet Scenario
+    constants apply (``compute_time=1.0`` s et al.), which is the
+    uncalibrated "before" column of BENCH_coldstart."""
+    from repro.core import calibrate
+    from repro.core.costmodel import Link, allreduce_cost, gossip_cost
+
+    if profile is None:
+        profile = calibrate.get_active()
+    if profile is not None:
+        link, launch = profile.link(), profile.t_launch
+        compute = (profile.t_step_dense if profile.t_step_dense is not None
+                   else s.compute_time)
+    else:
+        link, launch = Link(alpha=s.alpha, beta=s.beta), 0.0
+        compute = s.compute_time
+    n = max(2, data_par)
+    nb = max(1, n_buckets)
+    msgs = nb * (max(1, s.microbatch) if s.overlap == "pipelined" else 1)
+    if s.arch == "gossip":
+        wire = gossip_cost(payload_round, link=link)
+    else:
+        wire = allreduce_cost(s.allreduce_alg, n, payload_round, link)
+    rounds_per_step = sync_rounds(s, s.steps) / max(1, s.steps)
+    comm = rounds_per_step * (wire + launch * msgs)
+    return {
+        "step_time_s": compute + comm,
+        "comm_time_s": comm,
+        "calibrated": float(profile is not None),
     }
 
 
@@ -259,7 +313,9 @@ def run_trainer_scenario(
     """Train the tiny workload under the scenario's CommConfig; measures
     final loss, per-step wall-clock (compile excluded), wire bytes per step
     (from the bundle's build-time wire artifact, so cache-reused bundles
-    keep exact accounting) and the number of synchronization rounds.  Cells
+    keep exact accounting) and the number of synchronization rounds.  Every
+    cell carries the :func:`predict_trainer_step` step-time prediction
+    (calibrated when a :mod:`repro.core.calibrate` profile is active); cells
     on the overlap axis additionally carry the ``simulate_schedule``
     prediction of their per-step time and overlap saving.
     ``bundle_cache=False`` forces a fresh ``build_bundle`` — the per-cell
@@ -313,12 +369,18 @@ def run_trainer_scenario(
             fmt: kb * frac for fmt, kb in measured["wire_format_kb"].items()}
         measured["wire_resync_kb_per_step"] = (
             trainer_wire_resync_per_step(s, bundle.wire or {}) / 1e3)
-    predicted: dict[str, Any] = {}
+    # every cell carries the analytic step-time prediction (calibrated when a
+    # profile is active, datasheet constants otherwise) so predicted-vs-
+    # measured rel-err is a first-class sweep column, not an overlap-only one
+    predicted: dict[str, Any] = predict_trainer_step(
+        s, data_par=dp,
+        payload_round=plan_payload_bytes(bundle.bucket_plan),
+        n_buckets=len(bundle.bucket_plan.buckets))
     if s.overlap == "pipelined":
-        predicted = predict_overlap_saving(
+        predicted.update(predict_overlap_saving(
             s, compute_s=float(step_s),
             payload_round=plan_payload_bytes(bundle.bucket_plan),
-            n_buckets=len(bundle.bucket_plan.buckets), data_par=dp)
+            n_buckets=len(bundle.bucket_plan.buckets), data_par=dp))
     every = log_every or max(1, s.steps - 1)
     series = {"loss": np.asarray(
         [h["loss"] for h in trainer.history
@@ -513,6 +575,7 @@ def measure_trainer_sweep(
         "percell_s": percell_s,
         "speedup": percell_s / shared_s,
         "max_rel_dev_loss": dev_loss,
+        "persistent_cache": bundle_cache_stats().persistent_cache,
         "wire_kb_per_step": {
             r.tag: r.measured["wire_kb_per_step"] for r in shared if r is not None
         },

@@ -47,6 +47,12 @@ def main(argv=None) -> int:
     p.add_argument("--restore", default="")
     p.add_argument("--fake-devices", type=int, default=0)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cache-dir", default=os.environ.get("REPRO_CACHE_DIR", ""),
+                   metavar="DIR",
+                   help="persistent on-disk compiled-program cache: a later "
+                        "launch of the same bundle shape deserializes the "
+                        "XLA executables instead of re-compiling "
+                        "(default: $REPRO_CACHE_DIR)")
     args = p.parse_args(argv)
 
     if args.fake_devices:
@@ -66,6 +72,11 @@ def main(argv=None) -> int:
     from repro.optim.schedules import warmup_cosine
     from repro.train.steps import build_bundle
     from repro.train.trainer import Trainer
+
+    if args.cache_dir:
+        from repro.core import compilecache
+
+        compilecache.configure(args.cache_dir)  # after XLA_FLAGS are settled
 
     cfg = get_config(args.arch)
     if args.reduced:
