@@ -120,11 +120,29 @@ def default_path() -> str | None:
 
 
 def load_default() -> CalibrationProfile | None:
-    """The profile saved next to the configured cache dir, if any."""
+    """The profile saved next to the configured cache dir, if any.
+
+    A profile fitted under a different :func:`compilecache.cache_fingerprint`
+    (jax version, platform, device kind/count — e.g. a lane forcing a
+    different ``xla_force_host_platform_device_count``, or a shared cache
+    dir) is skipped with a stderr note: run.py auto-adopts this file, and a
+    foreign machine's constants would silently miscalibrate every predicted
+    column.  Explicit ``CalibrationProfile.load`` / ``--calibration PATH``
+    stays unchecked — naming a file is opting in."""
+    import sys
+
     path = default_path()
-    if path and os.path.exists(path):
-        return CalibrationProfile.load(path)
-    return None
+    if not (path and os.path.exists(path)):
+        return None
+    profile = CalibrationProfile.load(path)
+    stored = profile.meta.get("fingerprint")
+    current = list(compilecache.cache_fingerprint())
+    if stored is not None and list(stored) != current:
+        print(f"# calibration: ignoring {path} "
+              f"(fitted on fingerprint {stored}, this process is {current})",
+              file=sys.stderr)
+        return None
+    return profile
 
 
 # --- measurement ------------------------------------------------------------

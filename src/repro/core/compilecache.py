@@ -15,7 +15,12 @@ Two cooperating pieces:
   ``shape_class_key`` and the trainer ``bundle_cache_key`` — plus the
   jax/jaxlib version and device fingerprint (a cache produced by a different
   jax or device kind would never hit at the XLA layer, so the manifest must
-  not claim it would).  ``record_compile`` is called exactly when an
+  not claim it would) plus a hash of the ``repro`` package's own sources
+  (the shape-class key names WHICH step program a cell needs, not what the
+  program computes — without the source hash, editing compressor math or
+  gradient logic would leave the key unchanged and a warm cache dir would
+  silently deserialize the OLD executable and its stale wire artifact).
+  ``record_compile`` is called exactly when an
   in-memory registry MISSES and builds fresh; if the manifest already holds
   the signature, some previous process compiled this shape class and the
   build is a persistent **hit** (trace + deserialize, no XLA compile),
@@ -89,7 +94,11 @@ def reset_stats() -> None:
 
 def cache_fingerprint() -> tuple:
     """jax/jaxlib versions + device platform/kind: entries are only portable
-    within one fingerprint (a different jax or backend re-compiles anyway)."""
+    within one fingerprint (a different jax or backend re-compiles anyway).
+    Deliberately environment-only — the source hash lives in
+    :func:`source_fingerprint` instead, so calibration profiles (machine
+    constants, source-independent) can pin this without churning on every
+    code edit."""
     import jax
 
     try:
@@ -102,6 +111,38 @@ def cache_fingerprint() -> tuple:
     return (jax.__version__, jaxlib_v, dev.platform, dev.device_kind, jax.device_count())
 
 
+_SOURCE_HASH: str | None = None
+
+
+def source_fingerprint() -> str:
+    """sha256 over the ``repro`` package's own ``.py`` sources (sorted
+    relative path + contents), cached per process.  Part of every manifest /
+    executable digest: the shape-class keys name WHICH program a cell needs,
+    this pins WHAT the program computes, so editing step semantics (compressor
+    math, gradient logic, wire accounting) invalidates serialized executables
+    instead of silently replaying stale ones from a warm cache dir."""
+    global _SOURCE_HASH
+    if _SOURCE_HASH is None:
+        import repro
+
+        # namespace package (no __init__.py): the source roots live in
+        # __path__, not __file__
+        pkg_dirs = sorted(os.path.abspath(p) for p in repro.__path__)
+        h = hashlib.sha256()
+        for pkg_dir in pkg_dirs:
+            for root, dirs, files in os.walk(pkg_dir):
+                dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+                for fn in sorted(files):
+                    if not fn.endswith(".py"):
+                        continue
+                    path = os.path.join(root, fn)
+                    h.update(os.path.relpath(path, pkg_dir).encode())
+                    with open(path, "rb") as f:
+                        h.update(f.read())
+        _SOURCE_HASH = h.hexdigest()[:16]
+    return _SOURCE_HASH
+
+
 def stable_repr(key) -> str:
     """The serialization contract for manifest keys: ``repr`` of the cache-key
     tuple.  Every component of both layers' keys is primitives / primitive
@@ -111,7 +152,8 @@ def stable_repr(key) -> str:
 
 
 def stable_digest(kind: str, key) -> str:
-    payload = repr((kind, cache_fingerprint(), stable_repr(key)))
+    payload = repr((kind, cache_fingerprint(), source_fingerprint(),
+                    stable_repr(key)))
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
@@ -183,7 +225,9 @@ def record_compile(kind: str, key) -> bool:
     st.misses += 1
     tmp = path + f".tmp{os.getpid()}"
     with open(tmp, "w") as f:
-        json.dump({"kind": kind, "key": stable_repr(key), "fingerprint": list(cache_fingerprint())}, f)
+        json.dump({"kind": kind, "key": stable_repr(key),
+                   "fingerprint": list(cache_fingerprint()),
+                   "source": source_fingerprint()}, f)
     os.replace(tmp, path)  # atomic: concurrent processes race benignly
     return False
 

@@ -208,7 +208,13 @@ class _PersistentStep:
                 return self._compiled(*jax.tree.map(
                     lambda x: x if isinstance(x, jax.Array) else jnp.asarray(x),
                     args))
-            except Exception:  # arg-form drift (checked before any donation)
+            except (TypeError, ValueError):
+                # arg-form drift: aval/sharding mismatches are raised by
+                # argument checking BEFORE any donation, so the jit retry
+                # sees live buffers.  Anything else (a genuine runtime
+                # failure mid-execution) may have consumed the donated
+                # state, so it must propagate — a jit retry on deleted
+                # arrays would only mask the original error.
                 self._compiled = None
         return self._jit(*args)
 
@@ -393,11 +399,14 @@ def build_bundle(
                              exec_dir=(compilecache.exec_dir("bundle", key)
                                        if cache else None))
         _BUNDLE_STATS.builds += 1
-        # manifest the fresh build: every key component serializes stably
-        # (repr-level) across processes, so a later process re-deriving this
-        # bundle key pulls the XLA executables from the persistent cache.
-        compilecache.record_compile("bundle", key)
         if cache:
+            # manifest the fresh build: every key component serializes stably
+            # (repr-level) across processes, so a later process re-deriving
+            # this bundle key pulls the XLA executables from the persistent
+            # cache.  cache=False builds got exec_dir=None — no blobs on disk
+            # — so manifesting them would let a later process claim a hit it
+            # cannot serve (and inflate the hit/miss stats CI asserts on).
+            compilecache.record_compile("bundle", key)
             if len(_BUNDLE_CACHE) >= _BUNDLE_CACHE_CAP:
                 _BUNDLE_CACHE.pop(next(iter(_BUNDLE_CACHE)))
             _BUNDLE_CACHE[key] = cb

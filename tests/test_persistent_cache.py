@@ -146,6 +146,57 @@ def test_stats_surfaced_on_both_cache_stat_objects(tmp_path):
         assert b == {"hits": 1, "misses": 1, "dir": str(tmp_path)}
 
 
+def test_digest_pins_source_fingerprint(monkeypatch):
+    """Editing the repro package's sources must change every manifest /
+    executable digest: the shape-class key names WHICH program a cell needs,
+    the source hash pins WHAT it computes — without it a warm cache dir
+    would silently replay pre-edit executables."""
+    from repro.core import compilecache as cc
+
+    key = ("k",)
+    real = cc.source_fingerprint()
+    assert real and real != "0" * 16
+    before = cc.stable_digest("engine", key)
+    monkeypatch.setattr(cc, "_SOURCE_HASH", "0" * 16)
+    after = cc.stable_digest("engine", key)
+    assert before != after
+
+
+def test_cache_false_build_never_manifested(tmp_path):
+    """cache=False is the per-cell rebuild baseline: it gets exec_dir=None,
+    so no executable blobs land on disk — it must not seed the manifest
+    either, or a later process would claim a persistent hit
+    (trace+deserialize, no compile) it cannot actually serve."""
+    from repro.experiments.scenario import Scenario
+    from repro.experiments.trainer_substrate import (
+        make_tiny_workload, to_comm_config)
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim.optimizers import momentum_sgd
+    from repro.train.steps import build_bundle, bundle_cache_clear
+
+    s = Scenario(sync="bsp", n_workers=2, steps=8, compressor="qsgd",
+                 compressor_kwargs={"levels": 4}, error_feedback=True)
+    comm = to_comm_config(s)
+    cfg, shape, _ = make_tiny_workload()
+    mesh = make_test_mesh(data=1, model=1)
+    opt = momentum_sgd(0.0)
+
+    with isolated_cache(tmp_path) as cc:
+        bundle_cache_clear()
+        try:
+            build_bundle(cfg, mesh, comm, opt, shape, cache=False)
+            st = cc.stats("bundle")
+            assert (st.hits, st.misses) == (0, 0)
+            manifest = os.path.join(str(tmp_path), cc.MANIFEST_DIRNAME)
+            assert os.listdir(manifest) == []
+            build_bundle(cfg, mesh, comm, opt, shape, cache=True)
+            st = cc.stats("bundle")
+            assert (st.hits, st.misses) == (0, 1)
+            assert len(os.listdir(manifest)) == 1
+        finally:
+            bundle_cache_clear()
+
+
 # ---------------------------------------------------------------------------
 # key-serialization stability
 # ---------------------------------------------------------------------------
@@ -281,6 +332,29 @@ def test_profile_persists_next_to_cache_dir(tmp_path):
             alpha=1e-4, beta=1e-10, t_launch=1e-5, t_step_dense=None).save(path)
         got = calibrate.load_default()
         assert got is not None and got.t_step_dense is None
+
+
+def test_load_default_skips_foreign_fingerprint(tmp_path):
+    """run.py auto-adopts <cache_dir>/calibration.json — a profile fitted
+    under a different fingerprint (other platform / device count, e.g. a
+    shared cache dir) must be skipped, not silently miscalibrate every
+    predicted column.  A profile without stored fingerprint (explicitly
+    constructed, pre-upgrade file) is still adopted."""
+    from repro.core import calibrate, compilecache
+
+    with isolated_cache(tmp_path):
+        path = calibrate.default_path()
+        fp = list(compilecache.cache_fingerprint())
+        foreign = fp[:-1] + [fp[-1] + 1]  # same machine, other device count
+        calibrate.CalibrationProfile(
+            alpha=1e-4, beta=1e-10, t_launch=1e-5, t_step_dense=None,
+            meta={"fingerprint": foreign}).save(path)
+        assert calibrate.load_default() is None
+        calibrate.CalibrationProfile(
+            alpha=1e-4, beta=1e-10, t_launch=1e-5, t_step_dense=None,
+            meta={"fingerprint": fp}).save(path)
+        got = calibrate.load_default()
+        assert got is not None and got.meta["fingerprint"] == fp
 
 
 def test_predict_trainer_step_uses_calibrated_constants():
