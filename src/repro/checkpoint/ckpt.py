@@ -18,11 +18,48 @@ import numpy as np
 from repro.utils.tree import flatten_with_paths
 
 
+def _write_atomic(path: str, writer, retries: int = 1) -> None:
+    """Write ``path`` via a same-directory temp file + ``os.replace``.
+
+    ``os.replace`` is atomic on POSIX, so readers only ever see the old file
+    or the complete new one — a save killed mid-write leaves the previous
+    bytes intact.  One retry absorbs a transient ``OSError`` (flaky network
+    filesystems); a second failure propagates, and the temp file is removed
+    either way so a crashed writer never litters the checkpoint dir.
+    """
+    tmp = path + ".tmp"
+    for attempt in range(retries + 1):
+        try:
+            with open(tmp, "wb") as f:
+                writer(f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            return
+        except OSError:
+            if attempt >= retries:
+                raise
+        finally:
+            if os.path.exists(tmp):
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+
+
 def save(path: str, tree: Any, *, step: int = 0, extra: dict | None = None) -> None:
+    """Atomic save: every file lands via temp + ``os.replace``, arrays FIRST
+    and the manifest LAST.  The manifest is the checkpoint's validity marker
+    — its old copy keeps pointing at a coherent array set until the new one
+    replaces it in a single rename, so a worker killed mid-save (the churn
+    axis makes that a first-class event, not a freak accident) leaves the
+    previous checkpoint fully restorable."""
     os.makedirs(path, exist_ok=True)
     flat = flatten_with_paths(tree)
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(os.path.join(path, "arrays.npz"), **host)
+    # np.savez takes the open handle as-is (a bare path would grow .npz)
+    _write_atomic(os.path.join(path, "arrays.npz"),
+                  lambda f: np.savez(f, **host))
     treedef = jax.tree.structure(tree)
     manifest = {
         "step": step,
@@ -30,8 +67,9 @@ def save(path: str, tree: Any, *, step: int = 0, extra: dict | None = None) -> N
         "keys": sorted(host.keys()),
         "extra": extra or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    payload = json.dumps(manifest, indent=2).encode()
+    _write_atomic(os.path.join(path, "manifest.json"),
+                  lambda f: f.write(payload))
 
 
 def restore(path: str, like: Any, shardings: Any | None = None, *,
@@ -63,7 +101,13 @@ def restore(path: str, like: Any, shardings: Any | None = None, *,
     leaves_like, treedef = jax.tree.flatten(like)
     # rebuild in tree order
     path_order = list(flatten_with_paths(like).keys())
-    arrs = [host[k] for k in path_order]
+    # jnp.array (copy=True) forces each leaf into an XLA-owned buffer first:
+    # device_put of a raw numpy array can be ZERO-COPY on CPU (alignment
+    # permitting), and step programs donate the restored state — donating a
+    # buffer numpy owns makes XLA free foreign memory (heap corruption when
+    # the program runs outside jit's ownership checks, e.g. a deserialized
+    # AOT executable from the persistent cache).
+    arrs = [jax.numpy.array(host[k]) for k in path_order]
     if shardings is not None:
         sh_flat = list(jax.tree.leaves(shardings))
         arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_flat)]

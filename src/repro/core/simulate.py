@@ -79,6 +79,13 @@ class TimelineCfg:
     churn_start: int = 0  # first iteration (inclusive) dropout applies
     churn_end: int = -1  # last iteration (exclusive); -1 = until the end
     rejoin_policy: str = "reset"  # reset | pull_avg
+    # gradient-integrity axis: per-round P(a live worker's payload is
+    # corrupted).  A corrupted round is QUARANTINED — the bytes moved but are
+    # booked undelivered — and `quarantine_limit` consecutive quarantines
+    # escalate to a forced rejoin (charging the policy's resync cost).
+    corruption_rate: float = 0.0
+    corruption_kind: str = "none"  # none | nan | inf | spike | bitflip
+    quarantine_limit: int = 3
 
 
 @dataclass
@@ -94,6 +101,12 @@ class TimelineResult:
     resync_events: int = 0
     resync_seconds: float = 0.0
     resync_bytes: float = 0.0
+    # gradient-integrity accounting: rounds whose payload was quarantined
+    # (sent but not delivered), the wire bytes they moved, and bounded-
+    # quarantine escalations to the rejoin protocol
+    quarantine_events: int = 0
+    quarantined_bytes: float = 0.0
+    escalation_events: int = 0
 
     def row(self) -> dict:
         return {
@@ -105,6 +118,9 @@ class TimelineResult:
             "resync_events": self.resync_events,
             "resync_seconds": self.resync_seconds,
             "resync_bytes": self.resync_bytes,
+            "quarantine_events": self.quarantine_events,
+            "quarantined_bytes": self.quarantined_bytes,
+            "escalation_events": self.escalation_events,
         }
 
 
@@ -187,6 +203,58 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
     resync_seconds_total = resync_t * resync_events
     resync_bytes_total = resync_b * resync_events
 
+    # gradient-integrity event stream: per-round Bernoulli corruption draws
+    # over the live set (same window as churn).  A corrupted WIRE round is
+    # quarantined — the bytes moved but were not delivered — and
+    # `quarantine_limit` consecutive quarantines escalate to a forced rejoin
+    # that charges the policy's resync cost on the worker's clock.  Drawn
+    # after the churn draws so corruption-free cells keep their trajectories.
+    corrupt = np.zeros((n, T), dtype=bool)
+    esc = np.zeros((n, T), dtype=bool)
+    esc_t = esc_b = 0.0
+    if cfg.corruption_rate > 0:
+        if cfg.corruption_kind not in ("nan", "inf", "spike", "bitflip"):
+            raise ValueError(
+                f"corruption_rate > 0 needs a corruption_kind "
+                f"(got {cfg.corruption_kind!r})")
+        if cfg.rejoin_policy not in ("reset", "pull_avg"):
+            raise ValueError(
+                f"unknown rejoin_policy {cfg.rejoin_policy!r} "
+                "(expected 'reset' or 'pull_avg')")
+        start = min(max(int(cfg.churn_start), 0), T)
+        end = T if cfg.churn_end < 0 else min(int(cfg.churn_end), T)
+        if end > start:
+            cu = rng.uniform(size=(n, end - start))
+            corrupt[:, start:end] = ((cu < cfg.corruption_rate)
+                                     & alive[:, start:end])
+        # only wire rounds count (local syncs every H-th iteration)
+        if cfg.sync == "local":
+            wire_round = np.arange(T) % cfg.local_steps == cfg.local_steps - 1
+        else:
+            wire_round = np.ones(T, dtype=bool)
+        corrupt &= wire_round[None, :]
+        q = np.zeros(n, dtype=int)
+        for t in range(T):
+            if not wire_round[t]:
+                continue
+            q = np.where(alive[:, t] & corrupt[:, t], q + 1,
+                         np.where(alive[:, t], 0, q))
+            e = q >= cfg.quarantine_limit
+            esc[:, t] = e
+            q[e] = 0
+        if cfg.rejoin_policy == "pull_avg":
+            esc_t = cfg.alpha + cfg.beta * cfg.msg_bytes
+            esc_b = cfg.msg_bytes
+        else:
+            esc_t = cfg.alpha  # membership handshake only
+        compute = compute + esc_t * esc
+    escalation_events = int(esc.sum())
+    quarantine_events = int(corrupt.sum())
+    # escalation resyncs are real (delivered) transfers — book them with the
+    # rejoin resyncs so the per-sync bytes accounting below picks them up
+    resync_seconds_total += esc_t * escalation_events
+    resync_bytes_total += esc_b * escalation_events
+
     finish = np.zeros((n, T))
     t = np.zeros(n)  # current wall-clock per worker
     done = np.zeros(n, dtype=int)  # iterations completed
@@ -252,7 +320,8 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
             t[i] += compute[i, done[i]] + c_one * al
             comm_total[i] += c_one * al
             bytes_per_worker += (round_bytes * al
-                                 + resync_b * rejoin[i, done[i]]) / n
+                                 + resync_b * rejoin[i, done[i]]
+                                 + esc_b * esc[i, done[i]]) / n
             finish[i, done[i]] = t[i]
             stale_samples.append(done[i] - done.min())
             done[i] += 1
@@ -270,6 +339,9 @@ def simulate_timeline(cfg: TimelineCfg) -> TimelineResult:
         resync_events=resync_events,
         resync_seconds=float(resync_seconds_total),
         resync_bytes=float(resync_bytes_total),
+        quarantine_events=quarantine_events,
+        quarantined_bytes=float(round_bytes * quarantine_events),
+        escalation_events=escalation_events,
     )
 
 
@@ -304,6 +376,14 @@ class SimCfg:
     #: rejoin step (local/gossip schemes, where a rejoiner is actually
     #: stale), charging a dense model download per rejoin event.
     rejoin_policy: str = "reset"
+    # gradient-integrity axis: per-round P(a live worker's wire payload is
+    # corrupted in-domain).  The KIND is structural (the guarded program
+    # differs); the rate is traced.  A detected-corrupt contribution is
+    # quarantined for one round; `quarantine_limit` consecutive quarantines
+    # escalate to the rejoin protocol above.
+    corruption_rate: float = 0.0
+    corruption_kind: str = "none"  # none | nan | inf | spike | bitflip
+    quarantine_limit: int = 3
 
 
 class Problem(tuple):
@@ -434,6 +514,10 @@ class EngineSpec:
     #: "reset" | "pull_avg" — structural (the pull program differs);
     #: normalized to "reset" when churn is off
     rejoin_policy: str = "reset"
+    #: corruption kind (STRUCTURAL — the detect/quarantine program differs
+    #: per kind); normalized to "none" unless the rate is positive or the
+    #: cell explicitly keeps the integrity program (churn + kind set)
+    corruption_kind: str = "none"
 
 
 @dataclass
@@ -453,6 +537,10 @@ class CellParams:
     dropout: tuple | None = None
     churn_start: float = 0.0
     churn_end: float = float("inf")
+    # gradient-integrity values (traced; present only when the spec carries
+    # the guarded program): corruption probability + escalation bound
+    corruption: float | None = None
+    quarantine_limit: float = 3.0
 
     def as_tree(self) -> dict:
         out = {
@@ -468,6 +556,9 @@ class CellParams:
             out["dropout"] = jnp.asarray(self.dropout, f32)
             out["churn_start"] = jnp.asarray(self.churn_start, f32)
             out["churn_end"] = jnp.asarray(self.churn_end, f32)
+        if self.corruption is not None:
+            out["corruption"] = jnp.asarray(self.corruption, f32)
+            out["quarantine_limit"] = jnp.asarray(self.quarantine_limit, f32)
         return out
 
 
@@ -478,6 +569,21 @@ def _grad_takes_noise(grad_fn) -> bool:
         return "noise" in inspect.signature(grad_fn).parameters
     except (TypeError, ValueError):
         return False
+
+
+def _engine_corruption_kind(cfg: SimCfg) -> str:
+    """Structural corruption kind of a cell — mirrors
+    :func:`repro.core.types.effective_corruption_kind`: the kind stays
+    structural when the rate is positive OR the cell explicitly keeps the
+    guarded program (churn flag + kind set, for rate-0 bitwise pins);
+    otherwise it is inert and normalizes to "none" so it never splits a
+    shape class.  The opt-in gate is the EXPLICIT ``churn`` flag (mirroring
+    how ``churn=True`` keeps a dropout-0 cell in the churn class) — derived
+    churn (a positive dropout rate) with a stray kind stays inert."""
+    kind = getattr(cfg, "corruption_kind", "none")
+    if cfg.corruption_rate > 0 or (cfg.churn and kind != "none"):
+        return kind
+    return "none"
 
 
 def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
@@ -493,13 +599,25 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         raise ValueError(
             f"split_cfg needs dim to derive {type(cfg.compressor).__name__} "
             f"knob values ({batch_knobs(cfg.compressor)})")
-    churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout))
+    churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout)
+                 or cfg.corruption_rate > 0)
     if cfg.worker_dropout and len(cfg.worker_dropout) != cfg.n_workers:
         raise ValueError("worker_dropout length must equal n_workers")
     if cfg.rejoin_policy not in ("reset", "pull_avg"):
         raise ValueError(
             f"unknown rejoin_policy {cfg.rejoin_policy!r} "
             "(expected 'reset' or 'pull_avg')")
+    if cfg.corruption_kind not in ("none", "nan", "inf", "spike", "bitflip"):
+        raise ValueError(
+            f"unknown corruption_kind {cfg.corruption_kind!r} "
+            "(expected none|nan|inf|spike|bitflip)")
+    if cfg.corruption_rate > 0 and cfg.corruption_kind == "none":
+        raise ValueError("corruption_rate > 0 needs a corruption_kind")
+    if not 0.0 <= cfg.corruption_rate < 1.0:
+        raise ValueError("corruption_rate must be in [0, 1)")
+    if cfg.quarantine_limit < 1:
+        raise ValueError("quarantine_limit must be >= 1")
+    kind = _engine_corruption_kind(cfg)
     spec = EngineSpec(
         sync=cfg.sync,
         n_workers=cfg.n_workers,
@@ -510,6 +628,7 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         traced_noise=grad_noise is not None,
         churn=churn,
         rejoin_policy=(cfg.rejoin_policy if churn else "reset"),
+        corruption_kind=kind,
     )
     dropout = (tuple(float(p) for p in cfg.worker_dropout)
                if cfg.worker_dropout
@@ -524,6 +643,8 @@ def split_cfg(cfg: SimCfg, *, grad_noise: float | None = None,
         dropout=dropout if churn else None,
         churn_start=float(cfg.churn_start),
         churn_end=float(cfg.churn_end) if cfg.churn_end >= 0 else float("inf"),
+        corruption=float(cfg.corruption_rate) if kind != "none" else None,
+        quarantine_limit=float(cfg.quarantine_limit),
     )
     return spec, params
 
@@ -535,10 +656,12 @@ def shape_class_key(cfg: SimCfg) -> tuple:
     resolved to the class maximum after grouping."""
     from repro.core.compression.base import shape_fingerprint
 
-    churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout))
+    churn = bool(cfg.churn or cfg.dropout_rate > 0 or any(cfg.worker_dropout)
+                 or cfg.corruption_rate > 0)
     return (cfg.sync, cfg.n_workers, cfg.steps, bool(cfg.error_feedback),
             shape_fingerprint(cfg.compressor), churn,
-            cfg.rejoin_policy if churn else "reset")
+            cfg.rejoin_policy if churn else "reset",
+            _engine_corruption_kind(cfg))
 
 
 def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
@@ -553,12 +676,14 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
     bits are
     accumulated in-scan from the compressor roundtrip — data-dependent
     (threshold-style) payloads charge their *measured* size."""
+    from repro.core import integrity
     from repro.core.compression.base import roundtrip_bits, roundtrip_bits_ef
 
     grad_fn, loss_fn, x0, x_star0 = problem
     has_data = getattr(problem, "data", None) is not None
     n, dim = spec.n_workers, x0.size
     sync = spec.sync
+    corrupt = spec.corruption_kind != "none"
     widx = jnp.arange(n)
     if spec.traced_noise and not _grad_takes_noise(grad_fn):
         raise ValueError(
@@ -601,7 +726,9 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
             return out, ef, wb
 
         def step(carry, t):
-            if spec.churn:
+            if corrupt:
+                X, ef, delay_buf, key, total_bits, m_prev, qc, qb, qr, qe = carry
+            elif spec.churn:
                 X, ef, delay_buf, key, total_bits, m_prev = carry
             else:
                 X, ef, delay_buf, key, total_bits = carry
@@ -641,6 +768,16 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                     # each pull is a dense model download (resync transfer)
                     total_bits = total_bits + jnp.where(
                         n_don > 0, jnp.sum(rejoined) * 32.0 * dim, 0.0)
+                if corrupt:
+                    # per-worker corruption flags: own fold tag off the carry
+                    # key, so the mask / gradient / compressor streams are
+                    # untouched; only live in-window workers send a payload
+                    cu = jax.random.uniform(
+                        jax.random.fold_in(key, integrity.CORRUPT_FOLD), (n,))
+                    cflag = jnp.where(in_window & (m > 0)
+                                      & (cu < p["corruption"]), 1.0, 0.0)
+                    valid_round = jnp.ones((n,), f32)
+                    qbits_step = jnp.zeros((), f32)
             G = grad_all(X, gkeys)
 
             if sync == "gossip":
@@ -652,8 +789,23 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                     # stale residual is dropped (carry-out zero)
                     ef = jnp.where(rejoined[:, None] > 0, jnp.zeros_like(ef),
                                    jnp.where(m[:, None] > 0, ef2, ef))
-                    Weff = masked_mixing_matrix(W, m)
-                    X = Weff @ (X - lr * Ghat * m[:, None])
+                    Y = X - lr * Ghat * m[:, None]
+                    m_eff = m
+                    if corrupt:
+                        # the wire payload is the worker's mixed row: corrupt
+                        # it in-domain, validate, and drop detected rows from
+                        # the mixing (the quarantined worker keeps its own
+                        # local update — quarantine is not death); an
+                        # UNDETECTED corruption flows into the mix for real
+                        Yw = integrity.corrupt_dense(spec.corruption_kind, Y,
+                                                     cflag[:, None])
+                        valid = integrity.dense_valid(Yw, per_row=True)
+                        m_eff = m * valid
+                        Y = jnp.where(valid[:, None] > 0, Yw, Y)
+                        valid_round = valid
+                        qbits_step = jnp.sum(wb * m * (1.0 - valid))
+                    Weff = masked_mixing_matrix(W, m_eff)
+                    X = Weff @ Y
                     total_bits = total_bits + jnp.sum(wb * m)
                 else:
                     ef = ef2
@@ -669,19 +821,51 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                 else:
                     G_eff = G
                 Ghat, ef2, wb = apply_compression(ckeys, G_eff, ef)
+                m_ef = m if spec.churn else None
+                if corrupt and sync != "local":
+                    # corrupt the post-compression reconstruction — the dense
+                    # image of the worker's wire payload; a DETECTED row is
+                    # zeroed via select (NaN * 0 would still poison the sum)
+                    # and leaves the denominator; an undetected one flows in
+                    Gw = integrity.corrupt_dense(spec.corruption_kind, Ghat,
+                                                 cflag[:, None])
+                    valid = integrity.dense_valid(Gw, per_row=True)
+                    Ghat = jnp.where(valid[:, None] > 0, Gw,
+                                     jnp.zeros_like(Gw))
+                    m_ef = m * valid
+                    valid_round = valid
+                    qbits_step = jnp.sum(wb * m * (1.0 - valid))
                 # EF residuals of masked-out workers freeze: they neither
                 # sent nor accumulated this round; a rejoiner drops its
-                # stale residual at the end of its rejoin round
+                # stale residual at the end of its rejoin round; a
+                # QUARANTINED round freezes too — it was never delivered
                 if spec.churn:
                     ef = jnp.where(rejoined[:, None] > 0, jnp.zeros_like(ef),
-                                   jnp.where(m[:, None] > 0, ef2, ef))
+                                   jnp.where(m_ef[:, None] > 0, ef2, ef))
                 else:
                     ef = ef2
                 if sync == "local":
                     if spec.churn:
                         X = X - lr * Ghat * m[:, None]
                         is_sync = (t + 1) % p["local_steps"] == 0
-                        xs = jnp.sum(X * m[:, None], axis=0) / n_alive
+                        if corrupt:
+                            # the wire payload at a sync point is the params:
+                            # a detected-corrupt row is dropped from the
+                            # average (weight AND denominator) for one round
+                            Xw = integrity.corrupt_dense(
+                                spec.corruption_kind, X, cflag[:, None])
+                            valid = integrity.dense_valid(Xw, per_row=True)
+                            m_s = m * valid
+                            xs = (jnp.sum(jnp.where(valid[:, None] > 0, Xw,
+                                                    jnp.zeros_like(Xw))
+                                          * m[:, None], axis=0)
+                                  / jnp.maximum(jnp.sum(m_s), 1.0))
+                            valid_round = jnp.where(is_sync, valid,
+                                                    jnp.ones_like(valid))
+                            qbits_step = jnp.where(
+                                is_sync, jnp.sum(wb * m * (1.0 - valid)), 0.0)
+                        else:
+                            xs = jnp.sum(X * m[:, None], axis=0) / n_alive
                         # only live workers adopt the (live-only) average;
                         # a dead worker rejoins by mixing back in later
                         X = jnp.where(is_sync & (m[:, None] > 0),
@@ -702,21 +886,58 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
                     # masked mean with denominator renormalized over the
                     # live set; the global model updates every row (PS
                     # semantics: a rejoining worker reads current params)
-                    gbar = jnp.sum(Ghat * m[:, None], axis=0) / n_alive
+                    if corrupt:
+                        # quarantined rows left the numerator above — the
+                        # denominator renormalizes over the live-AND-valid set
+                        gbar = (jnp.sum(Ghat * m[:, None], axis=0)
+                                / jnp.maximum(jnp.sum(m_ef), 1.0))
+                    else:
+                        gbar = jnp.sum(Ghat * m[:, None], axis=0) / n_alive
                     X = X - lr * gbar[None, :]
                     total_bits = total_bits + jnp.sum(wb * m)
                 else:  # bsp / ssp / asp: exact mean of the effective gradients
                     X = X - lr * jnp.mean(Ghat, axis=0)[None, :]
                     total_bits = total_bits + jnp.sum(wb)
+            if corrupt:
+                # bounded quarantine: consecutive corrupted rounds escalate
+                # into the rejoin protocol (EF reset; pull_avg additionally
+                # pulls the live-valid parameter average where a worker is
+                # actually stale) instead of retrying forever.  Every select
+                # rides AFTER the compression reductions — identity at rate 0
+                # (the bitwise dropout-0 lesson).  m_prev keeps TRUE liveness:
+                # quarantine recovery is not a rejoin.
+                q_new = jnp.where(m > 0,
+                                  jnp.where(valid_round > 0, 0.0, qc + 1.0),
+                                  qc)
+                esc = jnp.where(q_new >= p["quarantine_limit"], 1.0, 0.0)
+                ef = jnp.where(esc[:, None] > 0, jnp.zeros_like(ef), ef)
+                if (spec.rejoin_policy == "pull_avg"
+                        and sync in ("local", "gossip")):
+                    donors = m * valid_round * (1.0 - esc)
+                    n_don = jnp.sum(donors)
+                    xpull = (jnp.sum(X * donors[:, None], axis=0)
+                             / jnp.maximum(n_don, 1.0))
+                    take = (esc[:, None] > 0) & (n_don > 0)
+                    X = jnp.where(take, xpull[None, :], X)
+                    total_bits = total_bits + jnp.where(
+                        n_don > 0, jnp.sum(esc) * 32.0 * dim, 0.0)
+                qc = jnp.where(esc > 0, 0.0, q_new)
+                qb = qb + qbits_step
+                qr = qr + jnp.sum(m * (1.0 - valid_round))
+                qe = qe + jnp.sum(esc)
             xbar = jnp.mean(X, axis=0)
             out = (
                 loss_fn_(xbar),
                 jnp.mean(jnp.linalg.norm(X - xbar[None], axis=1)),
                 total_bits,
             )
+            if corrupt:
+                out = out + (qb, qr, qe)
             carry = (X, ef, delay_buf, key, total_bits)
             if spec.churn:
                 carry = carry + (m,)
+            if corrupt:
+                carry = carry + (qc, qb, qr, qe)
             return carry, out
 
         carry0 = (
@@ -728,10 +949,22 @@ def _build_cell_replica_fn(spec: EngineSpec, comp, problem):
         )
         if spec.churn:
             carry0 = carry0 + (jnp.ones((n,), f32),)
-        (Xf, *_), (losses, cons, bits) = jax.lax.scan(
-            step, carry0, jnp.arange(spec.steps)
-        )
-        return losses, cons, bits, jnp.linalg.norm(jnp.mean(Xf, 0) - x_star)
+        if corrupt:
+            carry0 = carry0 + (jnp.zeros((n,), f32), jnp.zeros((), f32),
+                               jnp.zeros((), f32), jnp.zeros((), f32))
+        carry_f, outs = jax.lax.scan(step, carry0, jnp.arange(spec.steps))
+        Xf = carry_f[0]
+        losses, cons, bits = outs[0], outs[1], outs[2]
+        extras = {}
+        if corrupt:
+            # cumulative per-step integrity accounting: wire bits booked
+            # quarantined (sent, not delivered), quarantined worker-rounds,
+            # and escalations into the rejoin protocol
+            extras = {"quarantined_bits": outs[3],
+                      "quarantine_rounds": outs[4],
+                      "escalations": outs[5]}
+        return (losses, cons, bits,
+                jnp.linalg.norm(jnp.mean(Xf, 0) - x_star), extras)
 
     return replica_fn
 
@@ -901,7 +1134,7 @@ def simulate_training_classbatch(
                             *[p.data for p in cell_probs])
     else:
         data = None
-    losses, cons, bits, errs = fn(stacked, seed_keys, data)
+    losses, cons, bits, errs, extras = fn(stacked, seed_keys, data)
     return [
         [
             {
@@ -909,6 +1142,8 @@ def simulate_training_classbatch(
                 "consensus": np.asarray(cons[c, r]),
                 "bits": np.asarray(bits[c, r], dtype=np.float64),
                 "x_star_err": float(errs[c, r]),
+                **{k: np.asarray(v[c, r], dtype=np.float64)
+                   for k, v in extras.items()},
             }
             for r in range(R)
         ]

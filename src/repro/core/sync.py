@@ -52,7 +52,8 @@ def _is_sync_step(step: int, H: int) -> bool:
 
 
 def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla",
-                   alive: Any = None, donor: Any = None) -> Any:
+                   alive: Any = None, donor: Any = None,
+                   payload: Any = None) -> Any:
     """Model averaging for Local SGD (Eq. 9, sync branch).
 
     ``alive=None`` is the churn-free path (bitwise unchanged).  With churn,
@@ -64,6 +65,12 @@ def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla",
     ``donor = alive * alive_prev`` so a rejoiner with stale parameters
     pulls the average without polluting it.  When nobody qualifies as a
     donor the round degrades to a freeze (everyone keeps their params).
+
+    ``payload`` (gradient-integrity axis) is the wire COPY of ``params``
+    that actually travels — possibly fault-injected.  Excluded payloads are
+    SELECTED out (``jnp.where`` on the donor bit), never multiplied by 0:
+    a NaN payload times zero would still poison the psum.  Adoption and the
+    freeze fallback always use the clean local ``params``.
     """
     n = 1
     for axn in axes:
@@ -78,6 +85,14 @@ def average_params(params: Any, axes: tuple[str, ...], impl: str = "xla",
         n_don = comms.psum(w, axes)
         n_eff = jnp.maximum(n_don, 1.0)
         adopt = (alive > 0) & (n_don > 0)
+
+        if payload is not None:
+            def _avg_wire(p, wp):
+                wire = jnp.where(w > 0, wp.astype(jnp.float32), 0.0)
+                s = collectives.allreduce(wire, axes, impl=impl)
+                return jnp.where(adopt, (s / n_eff).astype(p.dtype), p)
+
+            return jax.tree.map(_avg_wire, params, payload)
 
         def _avg(p):
             s = collectives.allreduce((p.astype(jnp.float32) * w), axes, impl=impl)

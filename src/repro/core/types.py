@@ -100,6 +100,10 @@ class CommConfig:
     #: dropout cells share one compiled bundle.
     churn: bool = False
     dropout_rate: float = 0.0  # per-round P(worker masked out)
+    #: per-worker dropout rates (one traced rate per shard); empty = use the
+    #: scalar ``dropout_rate`` for every worker.  Values are traced — cells
+    #: differing only in the vector share one compiled bundle.
+    worker_dropout: tuple = ()
     churn_start: int = 0  # first step (inclusive) dropout applies
     churn_end: int = -1  # last step (exclusive); -1 = until the end
     #: how a worker re-enters after a masked round — STRUCTURAL:
@@ -112,11 +116,42 @@ class CommConfig:
     #:              resync transfer in the wire/timeline accounting.
     rejoin_policy: str = "reset"
 
+    # --- gradient integrity (fault injection + quarantine) ---------------------
+    #: per-round P(a live worker's wire payload is corrupted) — traced, so
+    #: corruption-rate siblings share one compiled bundle.
+    corruption_rate: float = 0.0
+    #: STRUCTURAL corruption family, injected post-compression so packed /
+    #: int8 payloads are corrupted in-domain:
+    #: "nan" | "inf"  — non-finite scales/norms (dense: poisoned values);
+    #: "spike"        — magnitudes blown up by ~1e8 (encodes fine, detected
+    #:                  by the receiver's range check);
+    #: "bitflip"      — exponent-bit flips on dense f32 words, XORed int8
+    #:                  codes, XORed packed sign words.
+    corruption_kind: str = "none"
+    #: consecutive quarantined rounds a worker tolerates before escalating
+    #: to the rejoin protocol (reset/pull_avg) instead of retrying forever
+    #: (traced knob).
+    quarantine_limit: int = 3
+
     def with_updates(self, **kw) -> "CommConfig":
         return dataclasses.replace(self, **kw)
 
 
 DENSE = CommConfig()
+
+
+def effective_corruption_kind(comm: CommConfig) -> str:
+    """The STRUCTURAL corruption family of a config — the same normalization
+    :func:`bundle_spec` applies, shared so the runtime layers (aggregate,
+    steps) build exactly the program structure the spec advertises: the kind
+    stays structural while the traced rate can sweep 0..p in one class
+    (explicit ``churn=True`` keeps a rate-0 cell in the integrity class,
+    mirroring how it keeps dropout-0 cells in the churn class)."""
+    kind = getattr(comm, "corruption_kind", "none")
+    rate = getattr(comm, "corruption_rate", 0.0)
+    if rate > 0 or (getattr(comm, "churn", False) and kind != "none"):
+        return kind
+    return "none"
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +197,11 @@ class BundleSpec:
     #: "compressed" swaps the aggregation psum for gather+fused-kernel
     #: programs (normalized to "dense" for gossip, which mixes parameters)
     wire_format: str = "dense"
+    #: fault-injection family — STRUCTURAL (the integrity program adds the
+    #: inject/validate/quarantine selects); the rate is traced, so corruption-
+    #: rate siblings share one bundle.  Normalized to "none" when neither the
+    #: rate nor the explicit churn flag keeps the cell in the integrity class.
+    corruption_kind: str = "none"
 
 
 def bundle_spec(comm: CommConfig) -> BundleSpec:
@@ -185,13 +225,31 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
         raise ValueError(
             "pipelined overlap needs per-step aggregation (sync must be bsp, "
             f"got {comm.sync!r})")
-    churn = bool(comm.churn or comm.dropout_rate > 0)
+    churn = bool(comm.churn or comm.dropout_rate > 0
+                 or any(r > 0 for r in comm.worker_dropout)
+                 or comm.corruption_rate > 0)
     if comm.rejoin_policy not in ("reset", "pull_avg"):
         raise ValueError(
             f"unknown rejoin_policy {comm.rejoin_policy!r} "
             "(expected 'reset' or 'pull_avg')")
     if churn and not 0.0 <= comm.dropout_rate < 1.0:
         raise ValueError(f"dropout_rate must be in [0, 1), got {comm.dropout_rate!r}")
+    if churn and not all(0.0 <= r < 1.0 for r in comm.worker_dropout):
+        raise ValueError(
+            f"worker_dropout rates must be in [0, 1), got {comm.worker_dropout!r}")
+    if comm.corruption_kind not in ("none", "nan", "inf", "spike", "bitflip"):
+        raise ValueError(
+            f"unknown corruption_kind {comm.corruption_kind!r} "
+            "(expected 'none', 'nan', 'inf', 'spike' or 'bitflip')")
+    if comm.corruption_rate > 0 and comm.corruption_kind == "none":
+        raise ValueError("corruption_rate > 0 needs a corruption_kind")
+    if not 0.0 <= comm.corruption_rate < 1.0:
+        raise ValueError(
+            f"corruption_rate must be in [0, 1), got {comm.corruption_rate!r}")
+    if comm.quarantine_limit < 1:
+        raise ValueError(
+            f"quarantine_limit must be >= 1, got {comm.quarantine_limit!r}")
+    corruption_kind = effective_corruption_kind(comm)
     comp = get_compressor(comm.compressor, **comm.compressor_kwargs)
     if comm.wire_format not in ("dense", "compressed"):
         raise ValueError(f"unknown wire_format {comm.wire_format!r}")
@@ -236,6 +294,7 @@ def bundle_spec(comm: CommConfig) -> BundleSpec:
         churn=churn,
         rejoin_policy=(comm.rejoin_policy if churn else "reset"),
         wire_format=wire_fmt,
+        corruption_kind=corruption_kind,
     )
 
 
@@ -257,15 +316,34 @@ class CommKnobs:
     gossip_w: float = 1.0 / 3.0
     clip_norm: float = 0.0
     stale_scale: float = 1.0
-    dropout: float = 0.0  # churn: per-round P(worker masked out)
+    #: churn: per-round P(worker masked out).  A scalar, or — when the build
+    #: site passes the mesh's worker count — a per-worker tuple indexed by
+    #: each shard's mask index in-program (the vector is traced, so cells
+    #: differing only in rates share one compiled bundle).
+    dropout: Any = 0.0
     churn_start: float = 0.0
     churn_end: float = float("inf")
+    corruption: float = 0.0  # per-round P(live worker's payload corrupted)
+    quarantine_limit: float = 3.0  # consecutive quarantines before rejoin
     seed: int = 0
     comp: tuple = ()  # per-bucket dict of traced compressor knob values
 
     @classmethod
     def from_comm(cls, comm: CommConfig, comp_per_bucket: tuple, *,
-                  seed: int = 0, clip_norm: float = 0.0) -> "CommKnobs":
+                  seed: int = 0, clip_norm: float = 0.0,
+                  n_workers: int = 0) -> "CommKnobs":
+        if comm.worker_dropout:
+            if n_workers and len(comm.worker_dropout) != n_workers:
+                raise ValueError(
+                    f"worker_dropout has {len(comm.worker_dropout)} rates but "
+                    f"the mesh has {n_workers} data shards")
+            dropout = tuple(float(r) for r in comm.worker_dropout)
+        elif n_workers:
+            # normalize to a vector so scalar- and per-worker-rate cells
+            # share one knob-tree structure (hence one compiled bundle)
+            dropout = (float(comm.dropout_rate),) * n_workers
+        else:
+            dropout = comm.dropout_rate
         return cls(
             ef_decay=comm.ef_decay,
             momentum=comm.momentum_correction,
@@ -274,10 +352,12 @@ class CommKnobs:
             gossip_w=comm.gossip_mix_weight,
             clip_norm=clip_norm,
             stale_scale=comm.stale_scale,
-            dropout=comm.dropout_rate,
+            dropout=dropout,
             churn_start=float(comm.churn_start),
             churn_end=(float(comm.churn_end) if comm.churn_end >= 0
                        else float("inf")),
+            corruption=float(comm.corruption_rate),
+            quarantine_limit=float(comm.quarantine_limit),
             seed=seed,
             comp=comp_per_bucket,
         )
@@ -297,6 +377,8 @@ class CommKnobs:
             "dropout": jnp.asarray(self.dropout, f32),
             "churn_start": jnp.asarray(self.churn_start, f32),
             "churn_end": jnp.asarray(self.churn_end, f32),
+            "corruption": jnp.asarray(self.corruption, f32),
+            "quarantine_limit": jnp.asarray(self.quarantine_limit, f32),
             "seed": jnp.asarray(self.seed, jnp.int32),
             "comp": [
                 {k: jnp.asarray(v, f32) for k, v in d.items()} for d in self.comp

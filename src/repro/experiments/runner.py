@@ -182,6 +182,14 @@ def predict(s: Scenario, substrate: str) -> dict[str, float]:
             out["resync_events"] = ev
             out["resync_seconds"] = per_event_s * ev
             out["resync_bytes"] = per_event_b * ev
+            if s.corruption_rate > 0:
+                # Bernoulli corruption over the live set in the same window:
+                # each live worker's wire round is quarantined w.p. rate, and
+                # the quarantined bytes moved but were booked undelivered.
+                live = sum(1.0 - p for p in rates)
+                qe = s.corruption_rate * live * w * rounds
+                out["quarantine_events"] = qe
+                out["quarantined_bytes"] = _round_wire_bytes(s, eff) * qe
         return out
     if substrate == "training":
         dim_bits = 32.0 * (eff / s.msg_bytes)  # effective bits per element
@@ -279,6 +287,9 @@ def to_timeline_cfg(s: Scenario, seed: int | None = None) -> TimelineCfg:
         churn_start=s.churn_start,
         churn_end=s.churn_end,
         rejoin_policy=s.rejoin_policy,
+        corruption_rate=s.corruption_rate,
+        corruption_kind=s.corruption_kind,
+        quarantine_limit=s.quarantine_limit,
     )
 
 
@@ -303,6 +314,9 @@ def to_sim_cfg(s: Scenario, seed: int | None = None) -> SimCfg:
         churn_start=s.churn_start,
         churn_end=s.churn_end,
         rejoin_policy=s.rejoin_policy,
+        corruption_rate=s.corruption_rate,
+        corruption_kind=s.corruption_kind,
+        quarantine_limit=s.quarantine_limit,
     )
 
 
@@ -486,6 +500,15 @@ def _run_training_scenarios(
             if replicas > 1:
                 measured["final_loss_std"] = float(
                     np.std([float(o["loss"][-1]) for o in cell]))
+            if "quarantine_rounds" in cell[0]:
+                # guarded cells book their integrity tallies: worker-rounds
+                # quarantined, wire bits sent-but-undelivered, escalations
+                measured["quarantine_rounds"] = _agg(
+                    [float(o["quarantine_rounds"][-1]) for o in cell])
+                measured["quarantined_gbits"] = _agg(
+                    [float(o["quarantined_bits"][-1]) for o in cell]) / 1e9
+                measured["escalations"] = _agg(
+                    [float(o["escalations"][-1]) for o in cell])
             series = {
                 "loss": np.stack([o["loss"] for o in cell]),
                 "consensus": np.stack([o["consensus"] for o in cell]),

@@ -134,6 +134,17 @@ class Scenario:
     worker_speeds: tuple = ()
     straggler_dist: str = "lognormal"  # lognormal | uniform | none
 
+    # --- gradient integrity (fault injection + quarantine) --------------------
+    #: per-round P(a live worker's wire payload is corrupted) — traced, so
+    #: corruption-rate siblings share one compile/bundle.  Implies churn.
+    corruption_rate: float = 0.0
+    #: STRUCTURAL corruption family injected post-compression (in the wire
+    #: domain): nan | inf | spike | bitflip | none.
+    corruption_kind: str = "none"
+    #: consecutive quarantined rounds before escalating to the rejoin
+    #: protocol (traced knob).
+    quarantine_limit: int = 3
+
     # --- link / message model ------------------------------------------------
     alpha: float = 1e-3  # per-message latency (s)
     beta: float = 1e-9  # per-byte time (s/B)
@@ -148,7 +159,10 @@ class Scenario:
         object.__setattr__(self, "worker_speeds", tuple(self.worker_speeds))
         # churn is implied by any nonzero dropout so sweeps can vary
         # dropout_rate alone; all implied cells share the churn=True class.
-        if self.dropout_rate > 0 or any(self.worker_dropout):
+        # Corruption rides the same participation-mask machinery (a
+        # quarantined round IS a one-round drop), so it implies churn too.
+        if (self.dropout_rate > 0 or any(self.worker_dropout)
+                or self.corruption_rate > 0):
             object.__setattr__(self, "churn", True)
 
     # -- convenience ----------------------------------------------------------
@@ -197,7 +211,17 @@ class Scenario:
                 cell += f"+drop{self.dropout_rate * 100:g}%"
             if self.rejoin_policy != "reset":
                 cell += f"+rejoin={self.rejoin_policy}"
+            if self._corruption_active:
+                cell += (f"+corrupt{self.corruption_rate * 100:g}%"
+                         f"{self.corruption_kind}")
         return cell
+
+    @property
+    def _corruption_active(self) -> bool:
+        """Mirror of ``repro.core.types.effective_corruption_kind``: the
+        integrity program is in the cell's class."""
+        return (self.corruption_rate > 0
+                or (self.churn and self.corruption_kind != "none"))
 
     def replace(self, **kw) -> "Scenario":
         return replace(self, **kw)
@@ -280,6 +304,15 @@ class Scenario:
         if self.rejoin_policy not in ("reset", "pull_avg"):
             v.append(f"unknown rejoin_policy {self.rejoin_policy!r} "
                      "(expected 'reset' or 'pull_avg')")
+        if self.corruption_kind not in ("none", "nan", "inf", "spike",
+                                        "bitflip"):
+            v.append(f"unknown corruption_kind {self.corruption_kind!r}")
+        if not 0.0 <= self.corruption_rate < 1.0:
+            v.append("corruption_rate must be in [0, 1)")
+        if self.corruption_rate > 0 and self.corruption_kind == "none":
+            v.append("corruption_rate > 0 needs a corruption_kind")
+        if self.quarantine_limit < 1:
+            v.append("quarantine_limit must be >= 1")
         if self.n_workers < 2:
             v.append("need >= 2 workers for a distributed scenario")
         if substrate is not None:
@@ -300,15 +333,15 @@ class Scenario:
             if self.churn and substrate not in ("training", "trainer", "timeline"):
                 v.append("the churn axis runs on the executable substrates "
                          "(training/trainer) and the timeline event stream")
-            if self.churn and substrate == "trainer":
-                if self.pod_local:
-                    v.append("pod_local under churn is engine-only (the pod "
-                             "sync and the per-shard aggregation mask track "
-                             "liveness at different granularities)")
-                if self.worker_dropout:
-                    v.append("per-worker dropout vectors are engine/timeline-"
-                             "only (the trainer traces one scalar rate per "
-                             "cell)")
+            if self._corruption_active and substrate == "trainer":
+                if self.arch == "gossip":
+                    v.append("trainer gossip corruption is unimplemented "
+                             "(the engine models the corrupted mixing row; "
+                             "the mesh gossip exchange carries no per-peer "
+                             "payload hook yet)")
+                if self.compressor == "powersgd":
+                    v.append("powersgd's wire is a pair of factor psums — "
+                             "no per-worker payload to corrupt in-domain")
             if self.worker_speeds and substrate not in (None, "timeline"):
                 v.append("worker_speeds shape the timeline substrate only")
         return v

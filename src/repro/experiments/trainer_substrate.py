@@ -43,9 +43,13 @@ def to_comm_config(s: Scenario):
         wire_format=s.wire_format,
         churn=s.churn,
         dropout_rate=s.dropout_rate,
+        worker_dropout=s.worker_dropout,
         churn_start=s.churn_start,
         churn_end=s.churn_end,
         rejoin_policy=s.rejoin_policy,
+        corruption_rate=s.corruption_rate,
+        corruption_kind=s.corruption_kind,
+        quarantine_limit=s.quarantine_limit,
     )
 
 
@@ -62,10 +66,16 @@ def select_trainer_device_count(
         return None, "; ".join(bad)
     mb = max(1, s.microbatch)
     for dp in range(min(s.n_workers, n_devices), 1, -1):
+        if s.worker_dropout and dp != s.n_workers:
+            # the per-worker rate vector is indexed by shard: the mesh must
+            # realize exactly the scenario's worker count
+            continue
         if global_batch % dp == 0 and (global_batch // dp) % mb == 0:
             return dp, ""
     return None, (f"needs a >=2-device mesh dividing batch {global_batch} "
-                  f"into {mb} microbatches (have {n_devices} device(s))")
+                  f"into {mb} microbatches (have {n_devices} device(s)"
+                  + (f"; worker_dropout pins data_par={s.n_workers}"
+                     if s.worker_dropout else "") + ")")
 
 
 def _phase_sync_steps(s: Scenario, steps: int) -> int:
@@ -138,6 +148,26 @@ def expected_live_fraction(s: Scenario) -> float:
              else [s.dropout_rate] * max(1, s.n_workers))
     p_mean = sum(rates) / len(rates)
     return 1.0 - p_mean * w / s.steps
+
+
+def expected_quarantine_fraction(s: Scenario) -> float:
+    """Closed-form expected fraction of worker-wire-rounds quarantined: a
+    round is quarantined when the worker is alive (1 - p_drop), in the churn
+    window, its payload is corrupted (corruption_rate) AND the wire format
+    detects it.  The detection term is 1.0 for every validated format; the
+    1-bit packed sign wire has no redundancy (nothing is ever quarantined),
+    which the caller accounts for by this returning the *upper* bound —
+    measured-vs-predicted on sign cells shows the undetectable gap."""
+    rate = s.corruption_rate
+    if not s._corruption_active or rate <= 0 or s.steps <= 0:
+        return 0.0
+    start = min(max(s.churn_start, 0), s.steps)
+    end = s.steps if s.churn_end == -1 else min(s.churn_end, s.steps)
+    w = max(0, end - start)
+    rates = (list(s.worker_dropout) if s.worker_dropout
+             else [s.dropout_rate] * max(1, s.n_workers))
+    p_mean = sum(rates) / len(rates)
+    return rate * (1.0 - p_mean) * w / s.steps
 
 
 def trainer_wire_resync_per_step(s: Scenario,
@@ -341,7 +371,7 @@ def run_trainer_scenario(
     bundle = build_bundle(cfg, mesh, comm, momentum_sgd(momentum), shape,
                           seed=s.seed, microbatch=mb, cache=bundle_cache)
     trainer = Trainer(bundle, data, constant(s.lr), log_every=1)
-    trainer.fit(trainer.init(), s.steps)
+    state = trainer.fit(trainer.init(), s.steps)
 
     # per-step wall-clock with the compile excluded: first logged step pays
     # the jit, the rest amortize
@@ -369,6 +399,27 @@ def run_trainer_scenario(
             fmt: kb * frac for fmt, kb in measured["wire_format_kb"].items()}
         measured["wire_resync_kb_per_step"] = (
             trainer_wire_resync_per_step(s, bundle.wire or {}) / 1e3)
+    if s._corruption_active:
+        # measured quarantine tallies live in the final comm state (per
+        # shard, replicated over the model axis); the wire-rounds
+        # denominator is sync_rounds x microbatch-rounds for pipelined
+        # cells.  Quarantined bytes are BOOKED (excluded from delivery):
+        # the predicted figure is the closed form, the measured one scales
+        # the same per-step payload by the observed quarantine fraction.
+        import jax as _jax
+        cst = state["comm"]
+        qt = np.asarray(_jax.device_get(cst["quarantine_total"]), dtype=np.float64)
+        et = np.asarray(_jax.device_get(cst["escalation_total"]), dtype=np.float64)
+        q_rounds = float(np.sum(qt)) / max(1, model_par)
+        esc = float(np.sum(et)) / max(1, model_par)
+        rounds = sync_rounds(s, s.steps) * (mb if s.overlap == "pipelined" else 1)
+        units = dp  # mask units = data shards (per-shard even under pod_local)
+        measured["quarantine_rounds"] = q_rounds
+        measured["escalations"] = esc
+        qfrac_meas = q_rounds / max(1.0, float(rounds * units))
+        measured["quarantine_fraction"] = qfrac_meas
+        measured["wire_kb_per_step_quarantined"] = (
+            measured["wire_kb_per_step"] * qfrac_meas)
     # every cell carries the analytic step-time prediction (calibrated when a
     # profile is active, datasheet constants otherwise) so predicted-vs-
     # measured rel-err is a first-class sweep column, not an overlap-only one
@@ -376,6 +427,11 @@ def run_trainer_scenario(
         s, data_par=dp,
         payload_round=plan_payload_bytes(bundle.bucket_plan),
         n_buckets=len(bundle.bucket_plan.buckets))
+    if s._corruption_active:
+        qfrac = expected_quarantine_fraction(s)
+        predicted["quarantine_fraction"] = qfrac
+        predicted["wire_kb_per_step_quarantined"] = (
+            measured["wire_kb_per_step"] * qfrac)
     if s.overlap == "pipelined":
         predicted.update(predict_overlap_saving(
             s, compute_s=float(step_s),

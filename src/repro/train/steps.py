@@ -33,9 +33,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map, axis_size as compat_axis_size
 from repro.configs.base import InputShape, ModelConfig
-from repro.core import aggregate, comms, gossip, sync
+from repro.core import aggregate, comms, gossip, integrity, sync
 from repro.core.compression.base import get_compressor
-from repro.core.types import BundleSpec, CommConfig, CommKnobs, bundle_spec
+from repro.core.types import (
+    BundleSpec,
+    CommConfig,
+    CommKnobs,
+    bundle_spec,
+    effective_corruption_kind,
+)
 from repro.launch import specs as SP
 from repro.models import transformer as T
 from repro.models.sharding import AxisCtx, make_plan, tree_specs
@@ -413,8 +419,13 @@ def build_bundle(
     else:
         _BUNDLE_STATS.hits += 1
 
+    # the mask-unit count (shards over the DATA axes) normalizes the dropout
+    # knob to a per-worker vector — scalar-rate and worker_dropout cells then
+    # share one knob-tree structure, hence one compiled bundle
+    n_data = int(np.prod([mesh.shape[a] for a in cb.ax.data]))
     knobs = CommKnobs.from_comm(
-        comm, bplan.knob_values(), seed=seed, clip_norm=clip_norm
+        comm, bplan.knob_values(), seed=seed, clip_norm=clip_norm,
+        n_workers=n_data,
     ).as_tree()
     return StepBundle(
         cfg=cfg, comm=comm, mesh=mesh, ax=cb.ax,
@@ -460,6 +471,11 @@ def _compile_bundle(
     if comm.pod_local and "pod" in mesh.axis_names:
         agg_axes = tuple(a for a in ax.data if a != "pod")
         sync_axes = ("pod",)
+    # churn masks are drawn over ALL data axes even when aggregation is
+    # pod-scoped, so shards in different pods draw independent fates (the
+    # per-shard half of pod_local's dual-granularity liveness)
+    mask_axes = ax.data if agg_axes != ax.data else None
+    corruption_kind = effective_corruption_kind(comm)
 
     # ---- state specs ---------------------------------------------------------
     all_axes = ax.data + (ax.model,)
@@ -485,6 +501,16 @@ def _compile_bundle(
     if spec.churn:
         # previous round's per-shard participation bit — rejoin detection
         comm_state_specs["alive_prev"] = P(all_axes)
+        if comm.pod_local:
+            # pod-granularity liveness for the DCN sync round (derived from
+            # the per-shard bits, carried so pod rejoins are detectable)
+            comm_state_specs["pod_alive_prev"] = P(all_axes)
+    if corruption_kind != "none":
+        # consecutive-quarantine counter + lifetime quarantine/escalation
+        # tallies (per shard; see aggregate.init_comm_state)
+        comm_state_specs["qcount"] = P(all_axes)
+        comm_state_specs["quarantine_total"] = P(all_axes)
+        comm_state_specs["escalation_total"] = P(all_axes)
     # pipelined overlap, staleness 1: the last microbatch's bucket grads are
     # double-buffered across the step boundary (aggregated by the NEXT step)
     pipe_carry = spec.overlap == "pipelined" and spec.overlap_staleness == 1
@@ -517,6 +543,11 @@ def _compile_bundle(
         cstate: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
         if spec.churn:
             cstate["alive_prev"] = comms.varying(jnp.ones((1,), f32), all_axes)
+            if comm.pod_local:
+                cstate["pod_alive_prev"] = comms.varying(jnp.ones((1,), f32), all_axes)
+        if corruption_kind != "none":
+            for k in ("qcount", "quarantine_total", "escalation_total"):
+                cstate[k] = comms.varying(jnp.zeros((1,), f32), all_axes)
         if pipe_carry:
             cstate["overlap_pending"] = [
                 comms.varying(jnp.zeros((b.size,), f32), all_axes) for b in bplan.buckets
@@ -544,7 +575,8 @@ def _compile_bundle(
     # argument; this representative (the compile cell's values) only fixes
     # the tree STRUCTURE — values are rebound per cell by build_bundle.
     knobs0 = CommKnobs.from_comm(
-        comm, bplan.knob_values(), clip_norm=clip_norm
+        comm, bplan.knob_values(), clip_norm=clip_norm,
+        n_workers=int(np.prod([mesh.shape[a] for a in ax.data])),
     ).as_tree()
     knob_pspecs = jax.tree.map(lambda _: P(), knobs0)
 
@@ -611,12 +643,48 @@ def _compile_bundle(
 
             acc0 = [jnp.zeros((b.size,), f32) for b in bplan.buckets]
 
+            # churn under the staleness-1 double buffer: ONE mask per outer
+            # step (drawn here, outside the scan) held across every
+            # microbatch round — a dead worker's contributions all drop this
+            # step, and a REJOINING worker's carried-over stale bucket (slot
+            # 0, computed while it was out) is additionally gated off.  The
+            # caller owns the alive_prev update; aggregate_buckets receives
+            # the mask via ``alive_info`` so its per-call draw is skipped.
+            alive_seq = rejoin_seq = in_window = None
+            if spec.churn and spec.overlap_staleness == 1:
+                maxes = mask_axes if mask_axes is not None else agg_axes
+                widx = jnp.zeros((), jnp.int32)
+                for axn in maxes:
+                    widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
+                mkey = jax.random.fold_in(key, widx)
+                drop = knobs["dropout"]
+                if getattr(drop, "ndim", 0) == 1:
+                    drop = jnp.take(drop, widx)
+                u = jax.random.uniform(jax.random.fold_in(mkey, 0x6368), ())
+                stepf = state["step"].astype(f32)
+                in_window = ((stepf >= knobs["churn_start"])
+                             & (stepf < knobs["churn_end"]))
+                alive = jnp.where(in_window & (u < drop), 0.0, 1.0)
+                rejoined = alive * (1.0 - cstate["alive_prev"].reshape(()))
+                cstate = dict(cstate)
+                cstate["alive_prev"] = alive.reshape(1)
+                alive_seq = jnp.concatenate([
+                    (alive * (1.0 - rejoined)).reshape(1),
+                    jnp.broadcast_to(alive, (M - 1,)),
+                ]) if M > 1 else (alive * (1.0 - rejoined)).reshape(1)
+                rejoin_seq = jnp.concatenate([
+                    rejoined.reshape(1), jnp.zeros((M - 1,), f32),
+                ]) if M > 1 else rejoined.reshape(1)
+
             def body(carry, xs):
                 acc, pending, cst = carry
-                b, k, scale = xs
+                b, k, scale, a_k, r_k = xs
+                ainfo = ((a_k, r_k, in_window) if alive_seq is not None
+                         else None)
                 agg, cst = aggregate.aggregate_buckets(
                     comm, bplan, pending, cst, jax.random.fold_in(key, k),
-                    agg_axes, knobs=knobs,
+                    agg_axes, knobs=knobs, mask_axes=mask_axes,
+                    alive_info=ainfo,
                 )
                 pending, (l, m) = mb_grads(b)
                 acc = [a + scale * g for a, g in zip(acc, agg)]
@@ -625,10 +693,13 @@ def _compile_bundle(
             if spec.overlap_staleness == 1:
                 pending0 = list(cstate.pop("overlap_pending"))
                 scales = jnp.ones((M,), f32).at[0].set(knobs["stale_scale"])
+                zero_seq = jnp.zeros((M,), f32)
                 with comms.loop(M):  # collective accounting
                     (acc, pending, cst), (ls, ms) = jax.lax.scan(
                         body, (acc0, pending0, cstate),
-                        (mb, jnp.arange(M), scales),
+                        (mb, jnp.arange(M), scales,
+                         alive_seq if alive_seq is not None else zero_seq,
+                         rejoin_seq if rejoin_seq is not None else zero_seq),
                     )
                 cstate = dict(cst)
                 cstate["overlap_pending"] = pending
@@ -641,7 +712,8 @@ def _compile_bundle(
                         (acc, pending, cstate), (ls, ms) = jax.lax.scan(
                             body, (acc0, pending, cstate),
                             (jax.tree.map(lambda x: x[1:], mb),
-                             jnp.arange(M - 1), jnp.ones((M - 1,), f32)),
+                             jnp.arange(M - 1), jnp.ones((M - 1,), f32),
+                             jnp.zeros((M - 1,), f32), jnp.zeros((M - 1,), f32)),
                         )
                     loss = (l0 + jnp.sum(ls)) / M
                     metrics = jax.tree.map(
@@ -650,7 +722,7 @@ def _compile_bundle(
                     acc, loss, metrics = acc0, l0, m0
                 agg, cstate = aggregate.aggregate_buckets(
                     comm, bplan, pending, cstate, jax.random.fold_in(key, M - 1),
-                    agg_axes, knobs=knobs,
+                    agg_axes, knobs=knobs, mask_axes=mask_axes,
                 )
                 acc = [a + g for a, g in zip(acc, agg)]
                 cstate = dict(cstate)
@@ -669,7 +741,8 @@ def _compile_bundle(
                 if do_aggregate:
                     key = jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"])
                     grads, cstate = aggregate.aggregate_gradients(
-                        comm, bplan, grads, cstate, key, agg_axes, knobs=knobs
+                        comm, bplan, grads, cstate, key, agg_axes, knobs=knobs,
+                        mask_axes=mask_axes,
                     )
             if clip_norm:
                 grads = global_clip(grads, knobs["clip_norm"])
@@ -713,33 +786,101 @@ def _compile_bundle(
             # stale params never drag the average), and its compressor
             # state resets.
             cstate = dict(state["comm"])
-            # participation unit = one member of the averaging group: the
-            # data shard for local/post_local (sync_axes == ax.data), the
-            # POD for pod_local — every shard of a pod must agree on the
-            # pod's alive bit or within-pod consistency breaks.
-            widx = jnp.zeros((), jnp.int32)
-            for axn in sync_axes:
-                widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
-            mkey = jax.random.fold_in(
-                jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"]),
-                widx)
-            u = jax.random.uniform(jax.random.fold_in(mkey, 0x6368), ())
             stepf = state["step"].astype(f32)
             in_window = ((stepf >= knobs["churn_start"])
                          & (stepf < knobs["churn_end"]))
-            alive = jnp.where(in_window & (u < knobs["dropout"]), 0.0, 1.0)
-            alive_prev = cstate["alive_prev"].reshape(())
-            rejoined = alive * (1.0 - alive_prev)
-            donor = (alive * alive_prev if spec.rejoin_policy == "pull_avg"
+            mkey = None
+            if comm.pod_local:
+                # participation unit = the POD (every shard of a pod must
+                # agree on the pod's alive bit or within-pod consistency
+                # breaks).  The pod's bit DERIVES from the per-shard bits
+                # the within-pod aggregation rounds drew (alive_prev): a pod
+                # syncs iff any of its shards was live — the two liveness
+                # granularities stay coherent by construction instead of
+                # drawing independent fates.  One scalar psum on ICI.
+                shard_bit = cstate["alive_prev"].reshape(())
+                alive = jnp.where(comms.psum(shard_bit, agg_axes) > 0,
+                                  1.0, 0.0)
+                prev = cstate["pod_alive_prev"].reshape(())
+                rejoined = alive * (1.0 - prev)
+                cstate["pod_alive_prev"] = alive.reshape(1)
+            else:
+                # participation unit = the data shard (sync_axes == ax.data)
+                widx = jnp.zeros((), jnp.int32)
+                for axn in sync_axes:
+                    widx = widx * compat_axis_size(axn) + jax.lax.axis_index(axn)
+                mkey = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(knobs["seed"]),
+                                       state["step"]),
+                    widx)
+                drop = knobs["dropout"]
+                if getattr(drop, "ndim", 0) == 1:
+                    drop = jnp.take(drop, widx)
+                u = jax.random.uniform(jax.random.fold_in(mkey, 0x6368), ())
+                alive = jnp.where(in_window & (u < drop), 0.0, 1.0)
+                prev = cstate["alive_prev"].reshape(())
+                rejoined = alive * (1.0 - prev)
+                cstate["alive_prev"] = alive.reshape(1)
+            donor = (alive * prev if spec.rejoin_policy == "pull_avg"
                      else None)
+            # gradient integrity on the sync wire: local/post_local cells
+            # put their payload on the wire HERE (inner steps never
+            # aggregate), so the corruption axis rides the parameter-
+            # averaging payload — injected sender-side on a wire COPY (the
+            # shard's own params stay clean; the fault is in transit), with
+            # receiver-side finiteness/range validation folding into the
+            # donor mask.  pod_local cells corrupt at the per-step
+            # within-pod aggregation instead (aggregate_buckets), so the
+            # DCN sync stays clean — one injection point per wire payload.
+            payload = valid = esc = None
+            if corruption_kind != "none" and not comm.pod_local:
+                cflag = integrity.corruption_flag(
+                    mkey, knobs["corruption"], in_window & (alive > 0))
+                payload = jax.tree.map(
+                    lambda p: integrity.corrupt_dense(
+                        corruption_kind, p.astype(f32), cflag),
+                    params)
+                vloc = jnp.ones((), f32)
+                for leaf in jax.tree.leaves(payload):
+                    vloc = vloc * integrity.dense_valid(leaf)
+                # every shard of the participation unit must agree on
+                # validity (a unit's payload spans the model axis): any
+                # invalid slice anywhere invalidates the whole payload —
+                # one scalar psum, the validation round on the wire
+                unit_axes = tuple(a for a in all_axes if a not in sync_axes)
+                if unit_axes:
+                    bad = comms.psum(1.0 - vloc, unit_axes)
+                else:
+                    bad = 1.0 - vloc
+                valid = jnp.where(bad > 0, 0.0, 1.0)
+                base = donor if donor is not None else alive
+                donor = base * valid
             params = sync.average_params(params, sync_axes,
                                          impl=comm.collective,
-                                         alive=alive, donor=donor)
+                                         alive=alive, donor=donor,
+                                         payload=payload)
+            reset = rejoined
+            if valid is not None:
+                # bounded quarantine: the corrupted payload was discarded
+                # (this shard adopted the clean live-set average — its own
+                # params were never corrupted, the wire copy was), but
+                # consecutive corrupted rounds escalate to the rejoin
+                # protocol's compressor-state reset leg
+                qlim = knobs["quarantine_limit"]
+                q = cstate["qcount"].reshape(())
+                q_new = jnp.where(alive > 0,
+                                  jnp.where(valid > 0, 0.0, q + 1.0), q)
+                esc = jnp.where(q_new >= qlim, 1.0, 0.0)
+                cstate["qcount"] = jnp.where(esc > 0, 0.0, q_new).reshape(1)
+                cstate["quarantine_total"] = (cstate["quarantine_total"]
+                                              + (1.0 - valid).reshape(1))
+                cstate["escalation_total"] = (cstate["escalation_total"]
+                                              + esc.reshape(1))
+                reset = jnp.clip(rejoined + esc, 0.0, 1.0)
             for k in ("ef", "u"):
                 if k in cstate:
-                    cstate[k] = [jnp.where(rejoined > 0, jnp.zeros_like(e), e)
+                    cstate[k] = [jnp.where(reset > 0, jnp.zeros_like(e), e)
                                  for e in cstate[k]]
-            cstate["alive_prev"] = alive.reshape(1)
             return {**state, "params": params, "comm": cstate}
         params = sync.average_params(params, sync_axes, impl=comm.collective)
         return {**state, "params": params}
@@ -781,11 +922,14 @@ def _compile_bundle(
                 mkey = jax.random.fold_in(
                     jax.random.fold_in(jax.random.key(knobs["seed"]), state["step"]),
                     widx)
+                drop = knobs["dropout"]
+                if getattr(drop, "ndim", 0) == 1:
+                    drop = jnp.take(drop, widx)
                 u = jax.random.uniform(jax.random.fold_in(mkey, 0x6368), ())
                 stepf = state["step"].astype(f32)
                 in_window = ((stepf >= knobs["churn_start"])
                              & (stepf < knobs["churn_end"]))
-                alive = jnp.where(in_window & (u < knobs["dropout"]), 0.0, 1.0)
+                alive = jnp.where(in_window & (u < drop), 0.0, 1.0)
                 # rejoin detection: alive now, masked out last round
                 rejoined = alive * (1.0 - cstate["alive_prev"].reshape(()))
                 cstate["alive_prev"] = alive.reshape(1)

@@ -1,6 +1,8 @@
 """Trainer + checkpoint integration: save mid-run, restore (including onto a
 different mesh), continue — state must round-trip exactly."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -117,6 +119,136 @@ def test_partial_restore_allows_checkpoint_superset(tmp_path):
     with pytest.raises(ValueError, match="absent from the checkpoint"):
         restore(str(tmp_path / "ck"),
                 {"params": {"nope": jnp.zeros((1,))}}, partial=True)
+
+
+# ---------------------------------------------------------------------------
+# atomic save: a writer killed mid-save never destroys the previous
+# checkpoint (the churn axis makes mid-save death a first-class event)
+# ---------------------------------------------------------------------------
+
+
+def _tree(v: float):
+    import jax.numpy as jnp
+
+    return {"params": {"w": jnp.full((4,), v)}, "step": jnp.asarray(0, jnp.int32)}
+
+
+def test_atomic_save_midwrite_kill_preserves_old(tmp_path, monkeypatch):
+    """Kill the save at the rename boundary (the moment a non-atomic writer
+    would have truncated the target): the old checkpoint stays fully
+    restorable and no temp litter survives."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint import restore, save
+
+    ck = str(tmp_path / "ck")
+    save(ck, _tree(1.0), step=1)
+
+    def boom(*a, **k):
+        raise OSError("killed mid-write")
+
+    with monkeypatch.context() as m:
+        m.setattr(os, "replace", boom)
+        with pytest.raises(OSError):
+            save(ck, _tree(2.0), step=2)
+
+    out, step = restore(ck, _tree(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.full((4,), 1.0, np.float32))
+    assert not [p for p in os.listdir(ck) if p.endswith(".tmp")]
+
+
+def test_atomic_save_manifest_kill_keeps_checkpoint_coherent(tmp_path, monkeypatch):
+    """Killed between the arrays rename and the manifest rename: the old
+    manifest still describes a loadable array set (same tree), so restore
+    keeps working — arrays are new, the step marker is the old one."""
+    from repro.checkpoint import restore, save
+
+    ck = str(tmp_path / "ck")
+    save(ck, _tree(1.0), step=1)
+
+    real_replace = os.replace
+
+    def kill_manifest(src, dst):
+        if dst.endswith("manifest.json"):
+            raise OSError("killed before manifest rename")
+        return real_replace(src, dst)
+
+    with monkeypatch.context() as m:
+        m.setattr(os, "replace", kill_manifest)
+        with pytest.raises(OSError):
+            save(ck, _tree(2.0), step=2)
+
+    out, step = restore(ck, _tree(0.0))
+    assert step == 1  # old validity marker
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.full((4,), 2.0, np.float32))
+
+
+def test_atomic_save_retries_transient_oserror(tmp_path, monkeypatch):
+    """One transient OSError per file is absorbed; the save completes."""
+    from repro.checkpoint import restore, save
+
+    ck = str(tmp_path / "ck")
+    real_replace = os.replace
+    flaky = {"arrays.npz": 1, "manifest.json": 1}
+
+    def transient(src, dst):
+        name = os.path.basename(dst)
+        if flaky.get(name, 0) > 0:
+            flaky[name] -= 1
+            raise OSError("transient")
+        return real_replace(src, dst)
+
+    with monkeypatch.context() as m:
+        m.setattr(os, "replace", transient)
+        save(ck, _tree(3.0), step=3)
+
+    out, step = restore(ck, _tree(0.0))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.full((4,), 3.0, np.float32))
+
+
+def test_midwrite_kill_then_restore_rejoin(tmp_path, monkeypatch):
+    """End-to-end on the tiny workload: the trainer writes a checkpoint, a
+    later save dies mid-write, and ``restore_rejoin`` from the surviving
+    checkpoint still re-enters the run (params/opt restored, comm fresh)."""
+    from repro.checkpoint import save
+    from repro.core.types import CommConfig
+    from repro.experiments.trainer_substrate import make_tiny_workload
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim.optimizers import momentum_sgd
+    from repro.optim.schedules import constant
+    from repro.train.steps import build_bundle
+    from repro.train.trainer import Trainer
+
+    cfg, shape, data = make_tiny_workload()
+    comm = CommConfig(compressor="qsgd", compressor_kwargs={"levels": 4},
+                      error_feedback=True, churn=True, dropout_rate=0.2,
+                      rejoin_policy="pull_avg")
+    bundle = build_bundle(cfg, make_test_mesh(data=1), comm,
+                          momentum_sgd(0.0), shape, seed=0, microbatch=1)
+    d = str(tmp_path)
+    tr = Trainer(bundle, data, constant(0.1), ckpt_dir=d, ckpt_every=3,
+                 log_every=1)
+    state = tr.fit(tr.init(0), 3)  # writes step3
+
+    def boom(*a, **k):
+        raise OSError("killed mid-write")
+
+    with monkeypatch.context() as m:
+        m.setattr(os, "replace", boom)
+        with pytest.raises(OSError):
+            save(f"{d}/step3", state, step=99)  # overwrite attempt dies
+
+    st2, step = tr.restore_rejoin(f"{d}/step3")
+    assert step == 3 and int(np.asarray(st2["step"])) == 3
+    assert all(float(np.abs(np.asarray(e)).max()) == 0.0
+               for e in st2["comm"]["ef"])
+    tr.fit(st2, 3, start_step=step)
+    assert all(np.isfinite(h["loss"]) for h in tr.history)
 
 
 # ---------------------------------------------------------------------------
